@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The harness contract: ``name,us_per_call,derived`` CSV rows."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, reps: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / reps
+    return out, dt * 1e6

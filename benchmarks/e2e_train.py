@@ -1,0 +1,36 @@
+"""End-to-end trainer benchmark: steps/sec on a reduced config and the cost
+of the paper's fault-tolerance machinery (DP checkpoint scheduling +
+preemption handling) vs a bare loop."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.launch.train import train
+
+from .common import emit, timed
+
+
+def run():
+    cfg = dataclasses.replace(configs.smoke("smollm-135m"), n_layers=2,
+                              d_model=32, d_ff=64, vocab_size=256)
+    tc = TrainConfig(ckpt_dir="/tmp/repro_bench_ckpt_none",
+                     ckpt_policy="none", warmup_steps=5)
+    res, us = timed(train, cfg, tc, total_steps=40, verbose=False)
+    emit("e2e/train_40steps_no_ft", us, f"final_loss={res.final_loss:.3f}")
+
+    tc2 = TrainConfig(ckpt_dir="/tmp/repro_bench_ckpt_dp",
+                      ckpt_policy="dp", warmup_steps=5)
+    import shutil
+    shutil.rmtree("/tmp/repro_bench_ckpt_dp", ignore_errors=True)
+    res2, us2 = timed(train, cfg, tc2, total_steps=40,
+                      inject_preemptions=True, sim_hours_per_step=0.3,
+                      preemption_seed=3, verbose=False)
+    emit("e2e/train_40steps_dp_preempted", us2,
+         f"final_loss={res2.final_loss:.3f};restarts={res2.restarts};"
+         f"ckpts={res2.checkpoints};ft_overhead={us2/us-1:.1%}")
+
+
+if __name__ == "__main__":
+    run()

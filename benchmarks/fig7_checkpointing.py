@@ -1,0 +1,58 @@
+"""Paper Fig. 7: DP model-based checkpointing vs Young-Daly (MTTF=1h) vs no
+checkpointing - expected running-time increase by start age (a) and job
+length (b), via the Monte-Carlo executor."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import distributions as D
+from repro.core.policies import checkpointing as C
+from repro.core.policies import young_daly as YD
+
+from .common import emit, timed
+
+GRID = 1.0 / 60.0
+
+
+def run():
+    dist = D.constrained_for("n1-highcpu-16")
+    tables, us = timed(C.solve, dist, 720, grid_dt=GRID, delta_steps=1,
+                       n_sweeps=3)
+    emit("fig7/dp_solve_720x1440", us, "table=(721,1441);sweeps=3")
+
+    sched = C.extract_schedule(tables, 300, 0)
+    emit("fig7/dp_schedule_5h_age0", 0.0,
+         "intervals_min=" + "/".join(map(str, sched))
+         + "(paper 15/28/38/59/128)")
+    lf = C.model_lifetimes_fn(dist)
+    tau = float(YD.interval(GRID, 1.0))
+    kw = dict(grid_dt=GRID, delta_steps=1, n_trials=600, seed=17)
+
+    # Fig 7a: 4h job, varying start age
+    for age in (0.0, 2.0, 6.0, 10.0, 15.0):
+        dp = C.simulate_makespan(C.dp_policy_fn(tables), lf, 240,
+                                 start_age=age, **kw).mean()
+        yd = C.simulate_makespan(C.young_daly_policy_fn(tau, GRID), lf, 240,
+                                 start_age=age, **kw).mean()
+        emit(f"fig7a/overhead_age{age:g}h", 0.0,
+             f"dp={100*(dp/4-1):.1f}%;young_daly={100*(yd/4-1):.1f}%")
+
+    # Fig 7b: jobs from age 0, varying length
+    for Th in (1, 2, 4, 6, 8):
+        J = Th * 60
+        dp = C.simulate_makespan(C.dp_policy_fn(tables), lf, J, **kw).mean()
+        yd = C.simulate_makespan(C.young_daly_policy_fn(tau, GRID), lf, J,
+                                 **kw).mean()
+        none = C.simulate_makespan(C.no_checkpoint_policy_fn(), lf, J,
+                                   **kw).mean()
+        emit(f"fig7b/overhead_T{Th}h", 0.0,
+             f"dp={100*(dp/Th-1):.1f}%;young_daly={100*(yd/Th-1):.1f}%;"
+             f"none={100*(none/Th-1):.1f}%")
+
+    yd_pred = YD.expected_overhead(GRID, 1.0, restart_overhead=2 / 60.0)
+    emit("fig7/young_daly_model_predicted_overhead", 0.0,
+         f"{100*yd_pred:.1f}%(paper>25%)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the JSON
+records produced by ``repro.launch.dryrun``.
+
+Analytic roofline terms are recomputed here from the current
+``repro.analytics`` model (single source of truth), while compile/memory/
+HLO-collective numbers come from the stored records.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun_fsdp.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro import analytics, configs
+from repro.configs import SHAPES
+
+
+def _fmt_t(sec: float) -> str:
+    if sec <= 0:
+        return "0"
+    if sec < 1e-3:
+        return f"{sec*1e6:.0f}us"
+    if sec < 1.0:
+        return f"{sec*1e3:.1f}ms"
+    return f"{sec:.2f}s"
+
+
+def render(path: str, mesh: str = "16x16") -> str:
+    recs = json.load(open(path))
+    rows = []
+    header = ("| arch | shape | status | HBM/chip (arg+tmp) | t_compute | "
+              "t_memory | t_collective | dominant | roofline | 6ND/HLO | "
+              "compile |")
+    sep = "|" + "---|" * 11
+    rows.append(header)
+    rows.append(sep)
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        arch, shp = r["arch"], r["shape"]
+        if r["status"] == "skip":
+            rows.append(f"| {arch} | {shp} | skip (full attention) "
+                        "| - | - | - | - | - | - | - | - |")
+            continue
+        if r["status"] == "fail":
+            rows.append(f"| {arch} | {shp} | **FAIL** | - | - | - | - | - "
+                        "| - | - | - |")
+            continue
+        cfg = configs.get(arch)
+        cost = analytics.cell_cost(
+            cfg, SHAPES[shp], chips=r["chips"],
+            pods=2 if r["mesh"] == "2x16x16" else 1, rules=r["rules"])
+        roof = analytics.roofline(cost, chips=r["chips"])
+        mem = r.get("memory", {})
+        gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 1e9
+        hlo_coll = r.get("collectives", {}).get("total_bytes", 0) \
+            / analytics.ICI_BW
+        rows.append(
+            f"| {arch} | {shp} | ok | {gb:.1f} GB "
+            f"| {_fmt_t(roof['t_compute'])} | {_fmt_t(roof['t_memory'])} "
+            f"| {_fmt_t(roof['t_collective'])} (hlo {_fmt_t(hlo_coll)}) "
+            f"| {roof['dominant']} | {roof['roofline_fraction']*100:.0f}% "
+            f"| {roof['model_flops_ratio']*100:.0f}% "
+            f"| {r.get('compile_s', 0):.0f}s |")
+    return "\n".join(rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_fsdp.json"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    print(render(path, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Benchmark harness - one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  The dry-run/roofline numbers
+(deliverables e,g) are produced by ``repro.launch.dryrun`` (512-device
+placeholder mesh) and reported in EXPERIMENTS.md; this harness covers the
+paper's own tables/figures plus kernel and end-to-end microbenches.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (e2e_train, fig1_fit, fig5_wasted_work, fig6_scheduling,
+               fig7_checkpointing, fig8_service, kernels_bench, tonks_lemma)
+
+MODULES = [
+    ("fig1_fit", fig1_fit),
+    ("fig5_wasted_work", fig5_wasted_work),
+    ("fig6_scheduling", fig6_scheduling),
+    ("fig7_checkpointing", fig7_checkpointing),
+    ("fig8_service", fig8_service),
+    ("tonks_lemma", tonks_lemma),
+    ("kernels_bench", kernels_bench),
+    ("e2e_train", e2e_train),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in MODULES:
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going; report at the end
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,37 @@
+"""Inject the generated roofline tables into EXPERIMENTS.md at the
+ROOFLINE_TABLE markers.
+
+Usage: PYTHONPATH=src python -m benchmarks.update_experiments \
+           results/dryrun_production.json
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+from .roofline_report import render
+
+MARKERS = {
+    "16x16": "<!-- ROOFLINE_TABLE_16x16 -->",
+    "2x16x16": "<!-- ROOFLINE_TABLE_2x16x16 -->",
+}
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_production.json"
+    md_path = "EXPERIMENTS.md"
+    text = open(md_path).read()
+    for mesh, marker in MARKERS.items():
+        table = render(path, mesh)
+        block = (f"{marker}\n\n### Mesh {mesh} "
+                 f"({256 if mesh == '16x16' else 512} chips)\n\n{table}\n")
+        # replace marker plus any previously injected table up to the next
+        # heading or marker
+        pat = re.escape(marker) + r"(?:\n\n### Mesh.*?(?=\n## |\n<!-- |\Z))?"
+        text = re.sub(pat, block, text, count=1, flags=re.S)
+    open(md_path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""repro - preemption-aware JAX training framework.
+
+The paper's contribution lives in ``repro.core``:
+    distributions  - constrained-preemption model (Eq. 1-5) + baselines
+    fitting        - pure-JAX Levenberg-Marquardt CDF fitting + GoF
+    policies       - DP checkpointing (Eq. 11-15), scheduling (Eq. 6-10),
+                     Young-Daly
+    tonks          - the constrained-preemption lemma (exact + MC)
+    simulator      - calibrated synthetic fleet traces
+    service        - batch-computing-service simulation (Fig. 8)
+    online         - continuous refitting + change-point detection
+
+The training framework around it:
+    models, kernels, sharding, data, optim, checkpoint, fault, configs,
+    launch (mesh / train / serve / dryrun).
+"""

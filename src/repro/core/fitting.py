@@ -1,0 +1,231 @@
+"""Least-squares fitting of preemption models to empirical lifetime CDFs.
+
+The paper fits Eq. 1 with scipy's ``optimize.curve_fit`` (dogbox).  Here the
+fitter is a self-contained Levenberg-Marquardt loop in pure JAX (``lax`` control
+flow, ``jacfwd`` Jacobians) so it can run jitted/vmapped inside the training
+runtime (e.g. continuously re-fitting the model from recent fleet preemptions,
+as the paper's "detect policy changes" discussion suggests).  Tests cross-check
+against scipy.
+
+Families are parametrized by an unconstrained vector theta; ``_TRANSFORMS``
+maps theta -> positive/bounded natural parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import distributions as dist_mod
+from .distributions import (Constrained, Empirical, Exponential,
+                            GompertzMakeham, Weibull, DEADLINE_HOURS)
+
+
+def _softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def _inv_softplus(y):
+    y = jnp.asarray(y, jnp.result_type(float))
+    return jnp.log(jnp.expm1(jnp.maximum(y, 1e-6)))
+
+
+def _sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def _inv_sigmoid(y):
+    y = jnp.clip(jnp.asarray(y, jnp.result_type(float)), 1e-6, 1 - 1e-6)
+    return jnp.log(y / (1.0 - y))
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    name: str
+    n_params: int
+    build: Callable  # theta (unconstrained) -> distribution
+    theta0: Callable  # (t, y, L) -> initial unconstrained theta
+    # extra residuals appended to the data residuals (boundary conditions)
+    boundary: Callable = lambda d: jnp.zeros((0,))
+    # multi-start inits (best final LSE wins)
+    extra_theta0: tuple = ()
+
+
+def _build_constrained(theta, L):
+    tau1 = _softplus(theta[0])
+    tau2 = _softplus(theta[1])
+    b = _softplus(theta[2])
+    A = _sigmoid(theta[3])
+    return Constrained(tau1=tau1, tau2=tau2, b=b, A=A, L=L)
+
+
+def _build_exponential(theta, L):
+    return Exponential(mttf=_softplus(theta[0]), L=L)
+
+
+def _build_weibull(theta, L):
+    return Weibull(lam=_softplus(theta[0]), k=_softplus(theta[1]), L=L)
+
+
+def _build_gm(theta, L):
+    return GompertzMakeham(lam=_softplus(theta[0]), alpha=1e-3 * _softplus(theta[1]),
+                           beta=_softplus(theta[2]), L=L)
+
+
+FAMILIES = {
+    "constrained": Family(
+        name="constrained", n_params=4, build=_build_constrained,
+        theta0=lambda t, y, L: jnp.stack([
+            _inv_softplus(1.0), _inv_softplus(1.0), _inv_softplus(0.95 * L),
+            _inv_sigmoid(0.45)]),
+        # paper: "combination of the 4 fit parameters ... ensure F(0) ~= 0";
+        # weight-3 penalty on the raw (unclipped) Eq. 1 at t=0.
+        boundary=lambda d: 3.0 * d.cdf_raw(0.0)[None],
+    ),
+    "exponential": Family(
+        name="exponential", n_params=1, build=_build_exponential,
+        theta0=lambda t, y, L: jnp.stack([_inv_softplus(jnp.maximum(jnp.mean(t), 0.5))]),
+    ),
+    "weibull": Family(
+        name="weibull", n_params=2, build=_build_weibull,
+        theta0=lambda t, y, L: jnp.stack([
+            _inv_softplus(1.0 / jnp.maximum(jnp.mean(t), 0.5)), _inv_softplus(1.0)]),
+    ),
+    "gompertz_makeham": Family(
+        name="gompertz_makeham", n_params=3, build=_build_gm,
+        theta0=lambda t, y, L: jnp.stack([
+            _inv_softplus(0.1), _inv_softplus(0.1), _inv_softplus(0.3)]),
+        extra_theta0=(
+            lambda t, y, L: jnp.stack([_inv_softplus(0.05), _inv_softplus(1.0),
+                                       _inv_softplus(0.6)]),
+            # deadline-wall start: alpha ~ 1e-3*softplus(-14) ~ 1e-9, beta ~ 1
+            lambda t, y, L: jnp.stack([_inv_softplus(0.05), jnp.asarray(-14.0),
+                                       _inv_softplus(1.0)]),
+        ),
+    ),
+}
+
+
+def _model_cdf(dist):
+    """Fitting target: raw model curve where available (the clip in
+    Constrained.cdf would zero gradients at the boundary)."""
+    return dist.cdf_raw if hasattr(dist, "cdf_raw") else dist.cdf
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    dist: object
+    theta: jnp.ndarray
+    lse: jnp.ndarray           # sum of squared CDF residuals (data terms only)
+    iterations: jnp.ndarray
+    converged: jnp.ndarray
+
+
+def levenberg_marquardt(residual_fn, theta0, max_iters: int = 200,
+                        mu0: float = 1e-2, tol: float = 1e-9):
+    """Classic LM with multiplicative damping; fixed-shape, jit-friendly.
+
+    residual_fn: theta -> residual vector r; minimizes ||r||^2.
+    """
+    jac = jax.jacfwd(residual_fn)
+
+    def loss(theta):
+        r = residual_fn(theta)
+        return jnp.sum(r * r)
+
+    def cond(state):
+        i, theta, mu, prev, done = state
+        return (i < max_iters) & (~done)
+
+    def body(state):
+        i, theta, mu, prev, done = state
+        r = residual_fn(theta)
+        J = jac(theta)
+        JtJ = J.T @ J
+        g = J.T @ r
+        # LM step: (JtJ + mu*diag(JtJ)) delta = -g
+        damp = mu * jnp.diag(jnp.maximum(jnp.diag(JtJ), 1e-10))
+        delta = jnp.linalg.solve(JtJ + damp, -g)
+        cand = theta + delta
+        new = loss(cand)
+        accept = new < prev
+        theta = jnp.where(accept, cand, theta)
+        cur = jnp.where(accept, new, prev)
+        mu = jnp.where(accept, jnp.maximum(mu / 3.0, 1e-12), jnp.minimum(mu * 2.0, 1e8))
+        done = accept & (jnp.abs(prev - new) < tol * (1.0 + prev))
+        return i + 1, theta, mu, cur, done
+
+    theta0 = jnp.asarray(theta0, jnp.result_type(float))
+    state = (jnp.asarray(0), theta0, jnp.asarray(mu0, theta0.dtype),
+             loss(theta0), jnp.asarray(False))
+    i, theta, mu, final, done = jax.lax.while_loop(cond, body, state)
+    return theta, final, i, done
+
+
+def fit(family: str, t, y, L=DEADLINE_HOURS, max_iters: int = 200) -> FitResult:
+    """Fit a family's CDF to points (t, y) by least squares (paper Eq. 1 fit)."""
+    fam = FAMILIES[family]
+    t = jnp.asarray(t, jnp.result_type(float))
+    y = jnp.asarray(y, t.dtype)
+    L = jnp.asarray(L, t.dtype)
+
+    def residual(theta):
+        d = fam.build(theta, L)
+        r = _model_cdf(d)(t) - y
+        return jnp.concatenate([r, fam.boundary(d)])
+
+    best = None
+    for init in (fam.theta0, *fam.extra_theta0):
+        theta, lse_v, iters, done = levenberg_marquardt(residual, init(t, y, L),
+                                                        max_iters=max_iters)
+        if best is None or float(lse_v) < float(best[1]):
+            best = (theta, lse_v, iters, done)
+    theta, _, iters, done = best
+    d = fam.build(theta, L)
+    data_r = _model_cdf(d)(t) - y
+    return FitResult(dist=d, theta=theta, lse=jnp.sum(data_r * data_r),
+                     iterations=iters, converged=done)
+
+
+def fit_samples(family: str, samples, L=DEADLINE_HOURS, **kw) -> FitResult:
+    """Fit directly to a lifetime trace via its empirical CDF."""
+    emp = Empirical.from_samples(samples, L=L)
+    return fit(family, emp.knots, emp.values, L=L, **kw)
+
+
+def fit_all(samples, L=DEADLINE_HOURS, families=("constrained", "exponential",
+                                                 "weibull", "gompertz_makeham")):
+    """Fit every family to a trace; returns {family: FitResult} (Fig. 1/3)."""
+    return {f: fit_samples(f, samples, L=L) for f in families}
+
+
+# ---------------------------------------------------------------------------
+# Goodness of fit
+# ---------------------------------------------------------------------------
+
+def ks_statistic(dist, samples):
+    """Kolmogorov-Smirnov sup |F_model - F_empirical| over the sample points."""
+    s = jnp.sort(jnp.ravel(jnp.asarray(samples, jnp.result_type(float))))
+    n = s.shape[0]
+    f = dist.cdf(s)
+    lo = jnp.arange(n, dtype=f.dtype) / n
+    hi = (jnp.arange(n, dtype=f.dtype) + 1.0) / n
+    return jnp.maximum(jnp.max(jnp.abs(f - lo)), jnp.max(jnp.abs(f - hi)))
+
+
+def lse(dist, t, y):
+    r = dist.cdf(t) - jnp.asarray(y)
+    return jnp.sum(r * r)
+
+
+def qq_points(dist, samples, n_q: int = 99):
+    """QQ plot data (paper Fig. 3): model quantiles vs empirical quantiles."""
+    emp = Empirical.from_samples(samples)
+    q = (jnp.arange(n_q, dtype=jnp.result_type(float)) + 1.0) / (n_q + 1.0)
+    emp_q = emp.quantile(q)
+    # invert the model CDF on [0, ~3L] so unconstrained fits can overshoot L
+    model_q = dist_mod._bisect_icdf(dist.cdf, jnp.minimum(q, dist.cdf(3.0 * dist.L) - 1e-6),
+                                    0.0, 3.0 * dist.L)
+    return q, emp_q, model_q

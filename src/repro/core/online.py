@@ -1,0 +1,64 @@
+"""Online preemption-model maintenance (the paper's Discussion section:
+"a long-running cloud service can continuously update the model based on
+recent preemption behavior" and "detect policy and phase changes").
+
+``OnlineModelTracker`` keeps a rolling window of observed pod/VM lifetimes,
+refits Eq. 1 periodically (pure-JAX LM fitter), and raises a change-point
+flag when recent observations are no longer consistent with the live model
+(two-sided KS test at a configurable threshold).  The training runtime swaps
+the CheckpointManager's distribution on refit, so the DP schedule tracks the
+fleet's actual behavior.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from . import distributions, fitting
+
+
+@dataclasses.dataclass
+class OnlineModelTracker:
+    window: int = 512              # lifetimes kept
+    refit_every: int = 64          # observations between refits
+    ks_threshold: float = 0.15     # change-point sensitivity
+    min_samples: int = 64
+    prior: Optional[object] = None  # distribution used before enough data
+
+    def __post_init__(self):
+        self._obs = deque(maxlen=self.window)
+        self._since_fit = 0
+        self.model = self.prior or distributions.constrained_for()
+        self.n_refits = 0
+        self.change_points = 0
+        self.last_ks = 0.0
+
+    def observe(self, lifetime_hours: float) -> bool:
+        """Record one preemption; returns True if the model was refit."""
+        self._obs.append(float(lifetime_hours))
+        self._since_fit += 1
+        if len(self._obs) >= self.min_samples and \
+                self._since_fit >= self.refit_every:
+            self.refit()
+            return True
+        return False
+
+    def refit(self):
+        data = np.asarray(self._obs)
+        # change-point check BEFORE refitting: is the live model still
+        # consistent with the recent half of the window?
+        recent = data[-max(len(data) // 2, self.min_samples // 2):]
+        self.last_ks = float(fitting.ks_statistic(self.model, recent))
+        if self.last_ks > self.ks_threshold and self.n_refits > 0:
+            self.change_points += 1
+        res = fitting.fit_samples("constrained", data)
+        self.model = res.dist
+        self.n_refits += 1
+        self._since_fit = 0
+
+    @property
+    def drifted(self) -> bool:
+        return self.last_ks > self.ks_threshold

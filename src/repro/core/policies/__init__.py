@@ -1,0 +1,1 @@
+from . import checkpointing, scheduling, young_daly  # noqa: F401

@@ -1,0 +1,109 @@
+"""Model-driven job scheduling & VM-reuse policy (paper Eqs. 6-10, Fig. 6).
+
+All quantities are pure functions of a distribution object from
+``repro.core.distributions`` and broadcast over ``T`` (job length) and ``s``
+(VM age at job start); everything is jit/vmap-compatible and reused verbatim
+by the pod-reuse logic in ``repro.fault``.
+
+The provider's hard 24 h cap means a VM alive at age s is *certainly* gone by
+L, so we work with the capped CDF  F~(t) = 1 for t >= L.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def _f32(x):
+    return jnp.asarray(x, jnp.result_type(float))
+
+
+def capped_cdf(dist, t):
+    """F~(t): the model CDF with the deterministic deadline mass at L."""
+    t = _f32(t)
+    return jnp.where(t >= dist.L, 1.0, dist.cdf(t))
+
+
+def expected_wasted_work(dist, T):
+    """Eq. 7: E[W1(T)] = (1/F(T)) * integral_0^T t f(t) dt, the expected work
+    lost to a single preemption during a length-T job on a fresh VM."""
+    T = _f32(T)
+    return dist.partial_expectation(0.0, T) / jnp.maximum(dist.cdf(T), _EPS)
+
+
+def expected_makespan_new(dist, T):
+    """Eq. 9: E[T] = T + integral_0^T t f(t) dt (single-failure model, fresh VM)."""
+    T = _f32(T)
+    return T + dist.partial_expectation(0.0, T)
+
+
+def expected_makespan_at_age(dist, T, s):
+    """Eq. 10: E[T_s] = T + integral_s^{s+T} t f(t) dt, job started at VM age s.
+
+    Jobs whose window crosses the deadline cannot complete on this VM
+    (the provider kills it at L), so the makespan is +inf there.
+    """
+    T, s = _f32(T), _f32(s)
+    m = T + dist.partial_expectation(s, s + T)
+    return jnp.where(s + T >= dist.L, jnp.inf, m)
+
+
+def p_fail_existing_paper(dist, T, s):
+    """The paper's printed P_Existing = max(1, F(T+s) - F(T)).
+
+    Kept verbatim for reference; the printed 'max' and 'F(T)' are read as
+    typos - see :func:`p_fail_existing` for the corrected conditional form
+    used by the runtime.
+    """
+    return jnp.maximum(1.0, dist.cdf(_f32(T) + s) - dist.cdf(_f32(T)))
+
+
+def p_fail_existing(dist, T, s):
+    """P(preempted during (s, s+T] | alive at s), with the hard-cap rule:
+    windows crossing L always fail."""
+    T, s = _f32(T), _f32(s)
+    num = capped_cdf(dist, s + T) - capped_cdf(dist, s)
+    den = jnp.maximum(1.0 - capped_cdf(dist, s), _EPS)
+    return jnp.clip(jnp.where(s + T >= dist.L, 1.0, num / den), 0.0, 1.0)
+
+
+def p_fail_new(dist, T):
+    """Failure probability of a length-T job on a freshly launched VM."""
+    return jnp.clip(capped_cdf(dist, _f32(T)), 0.0, 1.0)
+
+
+def reuse_decision(dist, T, s, relaunch_overhead=0.0):
+    """True -> run on the existing (age-s) VM; False -> relinquish and launch
+    a new one.  Decided by comparing Eq. 10 against Eq. 9 (lower expected
+    makespan wins), exactly as in the paper.  ``relaunch_overhead`` (hours)
+    optionally charges the fresh VM its provisioning time - the paper's
+    analysis ignores it (0.0 default keeps the paper-verbatim criterion)."""
+    return expected_makespan_at_age(dist, T, s) < \
+        expected_makespan_new(dist, T) + relaunch_overhead
+
+
+def job_failure_prob_memoryless(dist, T, s):
+    """Baseline (SpotOn-style): always reuse the running VM (Fig. 6a grey)."""
+    return p_fail_existing(dist, T, s)
+
+
+def job_failure_prob_policy(dist, T, s):
+    """Our policy (Fig. 6a): failure probability after the reuse decision."""
+    reuse = reuse_decision(dist, T, s)
+    return jnp.where(reuse, p_fail_existing(dist, T, s), p_fail_new(dist, T))
+
+
+def mean_failure_prob_over_starts(dist, T, n_starts: int = 241, policy: bool = True):
+    """Fig. 6b: failure probability averaged over job start ages s in [0, L)."""
+    T = _f32(T)
+    s = jnp.linspace(0.0, float(dist.L) * (1.0 - 1e-3), n_starts)
+    fn = job_failure_prob_policy if policy else job_failure_prob_memoryless
+    probs = fn(dist, T[..., None], s)
+    return jnp.mean(probs, axis=-1)
+
+
+def expected_runtime_increase(dist, T):
+    """Fig. 5b: P(failure) * E[W1(T)] = integral_0^T t f(t) dt, the expected
+    increase in running time of a length-T job (single-failure model)."""
+    return dist.partial_expectation(0.0, _f32(T))

@@ -1,0 +1,132 @@
+"""Synthetic preemption-trace generation for constrained transient VMs/pods.
+
+The paper's raw 1,516-preemption trace is not public, so benchmarks and tests
+draw lifetimes from a *ground-truth hazard process* that reproduces the
+empirical phenomenology of Figs. 1-2 (steep early preemptions, long stable
+phase, deadline wall, hard 24 h cap, diurnal + VM-size modulation).
+
+Crucially the ground truth is a DIFFERENT functional family from the paper's
+Eq. 1 model - a three-term hazard
+
+    lambda(t) = h0 * exp(-t / d0)  +  h_s * diurnal(clock)  +  k / (L - t + s)^4
+
+so that "our model fits the data better than exponential/Weibull/GM" is a real
+statement about model capacity, not the generator fitting itself.
+
+Sampling goes through a dense cumulative-hazard grid (inverse transform), all
+jit/vmap-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .distributions import DEADLINE_HOURS
+
+_GRID_N = 4096
+
+
+def _dc(cls):
+    cls = dataclasses.dataclass(frozen=True, eq=False)(cls)
+    return jax.tree_util.register_dataclass(cls)
+
+
+@_dc
+class GroundTruth:
+    """Ground-truth constrained-preemption process (NOT the paper's model)."""
+
+    h0: jnp.ndarray = 0.45        # initial-phase hazard amplitude (1/h)
+    d0: jnp.ndarray = 1.4         # initial-phase decay (h)
+    h_stable: jnp.ndarray = 0.008  # stable-phase hazard floor (1/h)
+    k_wall: jnp.ndarray = 2.0     # deadline-wall strength
+    s_wall: jnp.ndarray = 0.6     # deadline-wall softening (h)
+    diurnal_amp: jnp.ndarray = 0.5   # Obs. 5: day/night modulation of h_stable
+    launch_clock: jnp.ndarray = 12.0  # wall-clock hour-of-day at VM launch
+    L: jnp.ndarray = DEADLINE_HOURS
+
+    def hazard(self, t):
+        t = jnp.asarray(t, jnp.result_type(float))
+        clock = self.launch_clock + t
+        # day (8-20h) busier than night: smooth +-amp modulation
+        diurnal = 1.0 + self.diurnal_amp * jnp.sin(2.0 * jnp.pi * (clock - 14.0) / 24.0)
+        gap = self.L - jnp.minimum(t, self.L - 1e-3) + self.s_wall
+        wall = self.k_wall / jnp.square(jnp.square(gap))
+        return self.h0 * jnp.exp(-t / self.d0) + self.h_stable * diurnal + wall
+
+    def _grid(self):
+        t = jnp.linspace(0.0, self.L, _GRID_N)
+        dt = t[1] - t[0]
+        lam = self.hazard(t)
+        cum = jnp.concatenate([jnp.zeros((1,), lam.dtype),
+                               jnp.cumsum(0.5 * (lam[1:] + lam[:-1]) * dt)])
+        return t, 1.0 - jnp.exp(-cum)  # grid CDF
+
+    def cdf(self, x):
+        t, F = self._grid()
+        return jnp.interp(jnp.asarray(x, t.dtype), t, F, left=0.0, right=F[-1])
+
+    def sample(self, key, shape=()):
+        """Lifetimes in (0, L]; survivors of the soft process are reclaimed at
+        exactly L (the provider's hard 24 h cap)."""
+        t, F = self._grid()
+        u = jax.random.uniform(key, shape, minval=1e-6, maxval=1.0 - 1e-9)
+        capped = u >= F[-1]
+        # invert the grid CDF
+        x = jnp.interp(jnp.minimum(u, F[-1] - 1e-7), F, t)
+        return jnp.where(capped, self.L, x)
+
+
+# Ground-truth processes per VM type, consistent with Obs. 4 (larger VMs are
+# preempted more) and calibrated so fitted Eq.-1 parameters land in the
+# paper's quoted ranges (tau1 in [0.5,1.5], tau2~0.8, b~24, A in [0.4,0.5]).
+def ground_truth_for(vm_type: str = "n1-highcpu-16",
+                     launch_clock: float = 12.0,
+                     idle: bool = False) -> GroundTruth:
+    scale = {
+        "n1-highcpu-2": 0.55,
+        "n1-highcpu-4": 0.70,
+        "n1-highcpu-8": 0.85,
+        "n1-highcpu-16": 1.00,
+        "n1-highcpu-32": 1.45,
+        "tpu-v5e-pod": 1.00,
+    }[vm_type]
+    # Obs. 5: idle VMs live longer (lower stable hazard)
+    h_stable = 0.008 * (0.5 if idle else 1.0)
+    return GroundTruth(h0=0.45 * scale, h_stable=h_stable * scale,
+                       launch_clock=launch_clock)
+
+
+class FleetTrace(NamedTuple):
+    """A fleet-wide synthetic preemption study (the paper's 1,516-VM study)."""
+    vm_type_idx: jnp.ndarray   # (n,) int - index into vm_types list
+    launch_clock: jnp.ndarray  # (n,) wall-clock launch hour
+    lifetime: jnp.ndarray      # (n,) hours in (0, 24]
+
+
+def generate_fleet_trace(key, n_vms: int = 1516,
+                         vm_types=("n1-highcpu-2", "n1-highcpu-4", "n1-highcpu-8",
+                                   "n1-highcpu-16", "n1-highcpu-32")) -> FleetTrace:
+    """Reproduce the shape of the paper's empirical study: n_vms launches
+    across VM types, launch times spread over day/night."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    type_idx = jax.random.randint(k1, (n_vms,), 0, len(vm_types))
+    clock = jax.random.uniform(k2, (n_vms,), minval=0.0, maxval=24.0)
+    keys = jax.random.split(k3, n_vms)
+
+    def one(i, c, k):
+        # branchless across types: sample from each, select
+        samples = jnp.stack([ground_truth_for(v, launch_clock=c).sample(k)
+                             for v in vm_types])
+        return samples[i]
+
+    life = jax.vmap(one)(type_idx, clock, keys)
+    return FleetTrace(vm_type_idx=type_idx, launch_clock=clock, lifetime=life)
+
+
+def trace_for(key, vm_type: str = "n1-highcpu-16", n: int = 300,
+              launch_clock: float = 12.0, idle: bool = False):
+    """Single-type lifetime trace (one CDF curve of Fig. 1 / Fig. 2)."""
+    return ground_truth_for(vm_type, launch_clock, idle).sample(key, (n,))

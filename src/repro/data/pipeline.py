@@ -1,0 +1,79 @@
+"""Deterministic, shardable synthetic LM data pipeline.
+
+Design requirements inherited from the fault-tolerance story:
+  * **step-addressable** - batch(step) is a pure function of (seed, step), so
+    a job resumed from checkpoint step k regenerates exactly the batches it
+    would have seen (no data-loader state to checkpoint);
+  * **elastic** - the global batch is carved by (replica_id, n_replicas), so
+    after a pod loss the survivors re-shard the same global stream;
+  * **structured** - tokens follow a Zipfian marginal with Markov mixing so
+    the loss actually decreases during the e2e examples (a uniform stream
+    would pin the loss at log V).
+
+A real deployment swaps this module for a tokenized corpus reader with the
+same (seed, step, replica) addressing contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_alpha: float = 1.1
+    markov_period: int = 16
+
+    def _probs(self):
+        ranks = np.arange(1, self.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-self.zipf_alpha)
+        return jnp.asarray(p / p.sum(), jnp.float32)
+
+    def batch(self, step: int, replica_id: int = 0, n_replicas: int = 1):
+        """Returns {tokens, labels, mask} for this replica's slice of the
+        global batch at ``step``; fully deterministic."""
+        assert self.global_batch % n_replicas == 0
+        local = self.global_batch // n_replicas
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        key = jax.random.fold_in(key, replica_id)
+        logp = jnp.log(self._probs())
+        draw = jax.random.categorical(
+            key, logp[None, None, :], shape=(local, self.seq_len + 1))
+        # Markov mixing: periodically repeat earlier tokens so there is
+        # learnable structure (copy task flavored); the copy source sits in
+        # the unreplaced half of the previous half-period so targets always
+        # equal an OBSERVED token
+        idx = jnp.arange(self.seq_len + 1)
+        src = jnp.maximum(idx - self.markov_period // 2, 0)
+        repeat_mask = (idx % self.markov_period) >= (self.markov_period // 2)
+        seq = jnp.where(repeat_mask[None, :], draw[:, src], draw)
+        tokens = seq[:, :-1]
+        labels = seq[:, 1:]
+        return {"tokens": tokens.astype(jnp.int32),
+                "labels": labels.astype(jnp.int32),
+                "mask": jnp.ones_like(labels, jnp.float32)}
+
+
+def make_batch_specs(cfg, shape, *, for_loss: bool = True):
+    """ShapeDtypeStructs of a training batch for (arch cfg, shape cell) -
+    the dry-run's stand-ins (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if cfg.embeds_input:
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.dtype(cfg.compute_dtype))
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.pos_type == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if for_loss:
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    return specs

@@ -1,0 +1,2 @@
+from .preemption import (ElasticPlan, PreemptionEvent, PreemptionSource,
+                         StragglerWatchdog, plan_elastic_remesh)  # noqa: F401

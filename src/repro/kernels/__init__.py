@@ -1,0 +1,25 @@
+"""Compute hot-spot kernels.
+
+Three implementations per op, in three modules:
+
+  ref.py                pure-jnp oracles (ground truth for every test)
+  ops.py                jit'd dispatchers + XLA production paths:
+                          - flash_attention_xla: blocked online-softmax fwd
+                            with a hand-written FlashAttention-2 backward
+                            (custom_vjp; no O(S^2) residuals) - what the
+                            dry-run lowers and CPU training runs
+                          - _decode_xla: serving decode, cache consumed in
+                            stored dtype, f32 softmax statistics only
+                          - associative-scan linear recurrence
+  flash_attention.py    Pallas TPU kernel: grid (B*H, Sq/bq, Sk/bk), VMEM
+                        scratch accumulators, causal/windowed block skipping,
+                        GQA via index maps
+  rglru_scan.py         Pallas TPU kernel: sequence-blocked gated linear
+                        recurrence with a persistent VMEM hidden state
+  decode_attention.py   Pallas TPU kernel: flash-decode over a long KV cache
+                        (one HBM pass - the decode roofline optimum)
+
+Pallas kernels target TPU; on this CPU container they are validated with
+``interpret=True`` against ref.py over shape/dtype sweeps
+(tests/test_kernels.py).
+"""

@@ -1,0 +1,103 @@
+"""Flash-decode: single-token GQA attention over a long KV cache as a Pallas
+TPU kernel.
+
+Tiling: grid = (batch, S/block_k) with the cache-sequence axis sequential;
+the query tile (H x D) stays resident in VMEM while (block_k x KV x D) key /
+value tiles stream from HBM.  Online softmax state (acc: (H, D) f32, running
+max/sum: (H,)) lives in VMEM scratch; the final block normalizes and writes
+(H x D).  Decode is HBM-bandwidth-bound - the kernel reads the cache exactly
+once, which is the roofline optimum.
+
+Valid-length masking uses the per-batch ``lengths`` vector (streamed as a
+(1,)-block input); ring-buffer caches pass lengths == window.
+
+Oracle: kernels/ref.py decode_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale, block_k, kv_heads, q_heads):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    G = q_heads // kv_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    run = ki * block_k < length
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, KV, D)
+        v = v_ref[0].astype(jnp.float32)
+        # fold GQA: q (KV, G, D) x k (bk, KV, D) -> scores (KV, G, bk)
+        qg = q.reshape(kv_heads, G, -1)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))))
+        # -> (KV, G, bk); mask invalid cache slots
+        pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+        s = s.reshape(q_heads, block_k)                    # (H, bk)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        pg = p.reshape(kv_heads, G, block_k)
+        out = jax.lax.dot_general(pg, v, (((2,), (0,)), ((0,), (1,))))
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            out.reshape(q_heads, -1)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale=None,
+                     block_k: int = 256, interpret: bool = False):
+    """q: (B, H, D); caches: (B, S, KV, D); lengths: (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    bk = min(block_k, S)
+    while S % bk:
+        bk //= 2
+    nk = S // bk
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=bk,
+                               kv_heads=KV, q_heads=H)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki: (bi,)),
+            pl.BlockSpec((1, H, D), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((1, bk, KV, D), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bk, KV, D), lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+    return out

@@ -1,0 +1,136 @@
+"""FlashAttention-2 forward as a Pallas TPU kernel.
+
+Tiling: grid = (batch*q_heads, Sq/block_q, Sk/block_k); the last grid axis is
+the sequential online-softmax reduction (TPU executes the grid in row-major
+order on one core, so VMEM scratch persists across the k-axis).  BlockSpecs
+stream (block_q x D) query tiles and (block_k x D) key/value tiles HBM->VMEM;
+the f32 accumulator (block_q x D), running max and sum live in VMEM scratch.
+MXU alignment: block_q/block_k default 128 (TPU lane width 128, MXU 128x128);
+D is the head dim (64..256 for the assigned archs).
+
+GQA is handled in the index maps (q head h reads kv head h // (H/KV)) - no
+materialized K/V expansion.  Causality skips fully-masked k-blocks via
+pl.when predication; the final k-step normalizes and writes the output tile.
+
+The backward pass reuses the XLA flash backward from kernels/ops.py via
+custom_vjp (training on TPU would add a Pallas bwd kernel; the dry-run and
+CPU training lower the XLA path anyway - see DESIGN.md).
+
+Validated against kernels/ref.py with interpret=True (CPU) in
+tests/test_kernels.py over shape/dtype/causality sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, block_q, block_k, sk_off):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q + sk_off          # absolute position of q row 0
+    k_start = ki * block_k
+
+    # skip fully-masked blocks (strictly above the causal diagonal, or
+    # entirely left of the local window)
+    run = jnp.asarray(True)
+    if causal:
+        run = run & (k_start <= q_start + block_q - 1)
+    if window > 0:
+        run = run & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q,
+                                                               block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q,
+                                                               block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None, block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = D ** -0.5 if scale is None else scale
+    bq = min(block_q, Sq)
+    while Sq % bq:
+        bq //= 2
+    bk = min(block_k, Sk)
+    while Sk % bk:
+        bk //= 2
+    nq, nk = Sq // bq, Sk // bk
+    sk_off = Sk - Sq
+
+    # layout: fold heads into the leading grid axis via (B*H) "rows"
+    qr = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, D)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, D)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, D)
+
+    grid = (B * H, nq, nk)
+    kernel = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                               window=window, block_q=bq, block_k=bk,
+                               sk_off=sk_off)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, qi, ki, G=G, KV=KV:
+                         ((bh // G) if G > 1 else bh, ki, 0)),
+            pl.BlockSpec((1, bk, D),
+                         lambda bh, qi, ki, G=G, KV=KV:
+                         ((bh // G) if G > 1 else bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(B, H, Sq, D), 1, 2)

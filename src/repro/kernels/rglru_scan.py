@@ -1,0 +1,83 @@
+"""Gated linear recurrence (RG-LRU core) as a Pallas TPU kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t along the sequence.  Tiling: grid =
+(batch, S/block_s) with the sequence axis as the sequential (inner) grid
+dimension, so the (1, W) f32 hidden-state scratch persists across sequence
+blocks in VMEM.  Each block streams (block_s x W) coefficient tiles HBM->VMEM
+and runs the recurrence with an unrolled fori over the block's rows - each
+step is a W-wide VPU multiply-add (W = lru_width, 2560 for RecurrentGemma =
+20 VREG lanes of 128).
+
+The last block also emits h_last (the decode/prefill carry state).
+
+Oracle: kernels/ref.py linear_recurrence (lax.scan); the XLA production path
+is the associative scan in kernels/ops.py.  Tests sweep shapes/dtypes with
+interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, out_ref, hlast_ref, h_ref, *,
+                  block_s):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)          # (block_s, W)
+    b = b_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        out_ref[0, t, :] = h.astype(out_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[0])
+    h_ref[...] = h[None]
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        hlast_ref[0, ...] = h_ref[0].astype(hlast_ref.dtype)
+
+
+def linear_recurrence(a, b, h0=None, *, block_s: int = 256,
+                      interpret: bool = False):
+    """a, b: (B, S, W); h0: (B, W) or None.  Returns (h: (B,S,W), h_last)."""
+    B, S, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), a.dtype)
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    ns = S // bs
+    grid = (B, ns)
+    kernel = functools.partial(_rglru_kernel, block_s=bs)
+    out, hlast = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bs, W), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, bs, W), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, W), lambda bi, si: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, W), lambda bi, si: (bi, si, 0)),
+            pl.BlockSpec((1, W), lambda bi, si: (bi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, W), a.dtype),
+            jax.ShapeDtypeStruct((B, W), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out, hlast

@@ -1,0 +1,151 @@
+"""HLO-text statistics: collective operand bytes (trip-count aware) for the
+roofline's collective term.
+
+``collective_bytes(hlo_text)`` walks the module's computations, finds every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+sizes its result shape(s), and multiplies by the estimated execution count of
+the computation it lives in (while-loop bodies execute trip_count times -
+this framework compiles scan-over-layers, so ignoring trip counts would
+undercount by ~n_layers x).
+
+Trip counts are recovered from the canonical XLA counted-loop pattern: the
+while condition compares the induction variable against a constant; we take
+the largest integer constant compared in the condition computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls|condition|body|branch_computations)=\{?%?([\w\.\-]+)")
+# "<result> = <shape> <opcode>(" - the opcode must directly follow the result
+# shape, otherwise fusions CONSUMING a collective get miscounted at their own
+# (often much larger) output size
+_OPCODE_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\]{},.:]+))\s*([a-z][\w\-]*)\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _parse_computations(hlo: str) -> dict:
+    """computation name -> list of instruction lines."""
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m and "{" in line:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    comps = _parse_computations(hlo)
+
+    # while body -> trip count (from its condition computation)
+    body_trip = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" not in line and " while(" not in line \
+                    and "= while" not in line.replace("(", "("):
+                pass
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                consts = []
+                for cl in comps.get(cond, []):
+                    consts += [int(c) for c in _CONST_RE.findall(cl)]
+                # the trip bound is the compare constant; exclude init values
+                # (0/1) and shape-sized constants that also appear in
+                # condition blocks
+                consts = [c for c in consts if 1 < c < 100_000]
+                body_trip[body] = max(consts) if consts else 1
+
+    # execution multiplier per computation: product of trip counts along the
+    # call chain from the entry
+    children = defaultdict(set)
+    for name, lines in comps.items():
+        for line in lines:
+            for callee in _CALL_RE.findall(line):
+                if callee in comps:
+                    children[name].add((callee, body_trip.get(callee, 1)
+                                        if "body" in line or callee in body_trip
+                                        else 1))
+
+    mult = defaultdict(float)
+    entry = next((n for n in comps if "main" in n or n.startswith("entry")),
+                 None)
+    if entry is None and comps:
+        entry = list(comps)[0]
+
+    def walk(name, m, depth=0):
+        if depth > 64:
+            return
+        mult[name] = max(mult[name], m)
+        for callee, trips in children.get(name, ()):
+            walk(callee, m * max(trips, 1), depth + 1)
+
+    if entry:
+        walk(entry, 1.0)
+    for name in comps:
+        if name not in mult:
+            mult[name] = 1.0
+
+    bytes_by_kind = defaultdict(float)
+    count_by_kind = defaultdict(int)
+    for name, lines in comps.items():
+        for line in lines:
+            m = _OPCODE_RE.search(line)
+            if not m:
+                continue
+            shape_txt, opcode = m.group(1), m.group(2)
+            base = opcode[:-6] if opcode.endswith("-start") else opcode
+            if base not in _COLLECTIVES or opcode.endswith("-done"):
+                continue
+            b = _shape_bytes(shape_txt)
+            bytes_by_kind[base] += b * mult[name]
+            count_by_kind[base] += 1
+    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind))

@@ -1,0 +1,3 @@
+# transformer (the assembler) is imported lazily by users to avoid import
+# cycles with the block modules.
+from . import layers, moe, rglru, xlstm  # noqa: F401

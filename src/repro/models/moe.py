@@ -1,0 +1,113 @@
+"""Mixture-of-Experts block: top-k router + capacity-bounded dispatch/combine
+(GShard/Switch style, einsum-based so GSPMD shards experts over the `model`
+mesh axis = expert parallelism).
+
+Used by moonshot-v1-16b-a3b (64e top-6) and phi3.5-moe-42b-a6.6b (16e top-2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from ..sharding import annotate as A
+from .layers import cdt, pdt, init_rmsnorm, rms_norm, init_attention, \
+    attention_block, _normal
+
+
+def init_moe_mlp(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": A(_normal(ks[0], (d, e), pdt(cfg)), "w_embed", "w_experts"),
+        "gate": A(_normal(ks[1], (e, d, f), pdt(cfg)), "w_experts",
+                  "w_expert_ff", None),
+        "up": A(_normal(ks[2], (e, d, f), pdt(cfg)), "w_experts",
+                "w_expert_ff", None),
+        "down": A(_normal(ks[3], (e, f, d), pdt(cfg)), "w_experts", None,
+                  "w_expert_ff"),
+    }
+
+
+MOE_GROUP = 512  # tokens per dispatch group (bounds the one-hot tensors)
+
+
+def _group_size(T: int) -> int:
+    g = min(MOE_GROUP, T)
+    while T % g:
+        g //= 2
+    return max(g, 1)
+
+
+def moe_mlp(cfg, p, x):
+    """x: (B, S, d) -> (B, S, d) with top-k expert routing.
+
+    GShard-style grouped dense dispatch: tokens are split into groups of
+    ~MOE_GROUP, each group routes into per-expert capacity buffers via
+    one-hot einsums, so everything stays GSPMD-shardable (groups follow the
+    batch/data axis, experts the `model` axis) and the dispatch tensors stay
+    O(group * E * C) instead of O(T * E * C).
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    dt = cdt(cfg)
+    T = B * S
+    Tg = _group_size(T)
+    G = T // Tg
+    xt = x.reshape(G, Tg, d)
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, Tg, E)
+    gate_vals, idx = jax.lax.top_k(probs, K)                    # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(int(cfg.capacity_factor * Tg * K / E), 4)
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (G, Tg, K, E)
+    # position of each (token, k) within its expert's per-group buffer
+    pos = jnp.cumsum(onehot.reshape(G, Tg * K, E), axis=1) \
+        .reshape(G, Tg, K, E) - 1.0
+    keep = (pos < capacity) & (onehot > 0)
+    slot = jnp.where(keep, pos, -1.0).max(-1)                   # (G, Tg, K)
+    pos_oh = jax.nn.one_hot(slot, capacity, dtype=jnp.float32)  # (G, Tg, K, C)
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot * keep, pos_oh)  # (G,Tg,E,C)
+    comb = jnp.einsum("gtec,gtk,gtke->gtec", disp,
+                      gate_vals.astype(jnp.float32), onehot)
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt.astype(jnp.float32),
+                    disp).astype(dt)                            # (G, E, C, d)
+    xe = sharding.constrain(xe, "act_batch", "act_experts", None, None)
+    g = jnp.einsum("gecd,edf->gecf", xe, p["gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(dt))
+    ye = sharding.constrain(ye, "act_batch", "act_experts", None, None)
+    yt = jnp.einsum("gecd,gtec->gtd", ye.astype(jnp.float32), comb)
+    y = yt.reshape(B, S, d).astype(x.dtype)
+    return sharding.constrain(y, "act_batch", "act_seq", "act_embed")
+
+
+def aux_load_balance_loss(cfg, x, p):
+    """Switch-style load-balance auxiliary (fraction * router prob per expert)."""
+    dt = cdt(cfg)
+    T = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1).reshape(T, -1)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32), 0)
+    return cfg.n_experts * jnp.sum(frac * probs.mean(0))
+
+
+def init_moe_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_rmsnorm(cfg), "attn": init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(cfg), "moe": init_moe_mlp(ks[1], cfg)}
+
+
+def moe_layer(cfg, p, x, *, positions, cache=None, mode="train", window=0):
+    h, new_cache = attention_block(cfg, p["attn"],
+                                   rms_norm(x, p["ln1"], cfg.norm_eps),
+                                   positions=positions, cache=cache, mode=mode,
+                                   window=window)
+    x = x + h
+    x = x + moe_mlp(cfg, p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x, new_cache

@@ -1,0 +1,118 @@
+"""RecurrentGemma-style recurrent block: RG-LRU gated linear recurrence with a
+short temporal conv, mixed 2:1 with local sliding-window attention
+(arXiv:2402.19427).
+
+The RG-LRU core once gates are computed is the generic linear recurrence
+h_t = a_t * h_{t-1} + b_t, dispatched through kernels.ops (associative scan
+on XLA, Pallas sequence-blocked kernel on TPU).
+
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from ..kernels import ops
+from ..sharding import annotate as A
+from .layers import (_normal, cdt, pdt, init_rmsnorm, init_mlp, mlp_block,
+                     rms_norm)
+
+_C = 8.0
+
+
+def init_rglru_layer(key, cfg):
+    ks = jax.random.split(key, 8)
+    d, w = cfg.d_model, cfg.lru_width
+    p = {
+        "ln1": init_rmsnorm(cfg),
+        "in_x": A(_normal(ks[0], (d, w), pdt(cfg)), "w_embed", "w_lru"),
+        "in_gate": A(_normal(ks[1], (d, w), pdt(cfg)), "w_embed", "w_lru"),
+        "conv": A(_normal(ks[2], (cfg.conv_width, w), pdt(cfg)), "w_conv",
+                  "w_lru"),
+        "w_a": A(_normal(ks[3], (w,), pdt(cfg)), "w_lru"),
+        "b_a": A(jnp.zeros((w,), pdt(cfg)), "w_lru"),
+        "w_i": A(_normal(ks[4], (w,), pdt(cfg)), "w_lru"),
+        "b_i": A(jnp.zeros((w,), pdt(cfg)), "w_lru"),
+        # Lambda init so a^c lands in (0.9, 0.999) - the paper's stable range
+        "lam": A(jnp.asarray(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)),
+            pdt(cfg)), "w_lru"),
+        "out": A(_normal(ks[5], (w, d), pdt(cfg)), "w_lru", "w_embed"),
+    }
+    if cfg.d_ff:
+        p["ln2"] = init_rmsnorm(cfg)
+        p["mlp"] = init_mlp(ks[6], cfg)
+    return p
+
+
+def init_rglru_cache(cfg, batch, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    w = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv along seq. x: (B,S,W); kernel: (cw, W);
+    state: (B, cw-1, W) history for decode."""
+    cw = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (B, S+cw-1, W)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out, new_state
+
+
+def rglru_core(cfg, p, u, h0=None):
+    """u: (B,S,W) conv output. Returns (y, h_last)."""
+    dt = cdt(cfg)
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["w_a"].astype(jnp.float32)
+                       + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["w_i"].astype(jnp.float32)
+                       + p["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * uf)
+    h, h_last = ops.linear_recurrence(a.astype(dt), b.astype(dt),
+                                      None if h0 is None else h0.astype(dt))
+    return h, h_last
+
+
+def rglru_layer(cfg, p, x, *, positions=None, cache=None, mode="train",
+                window=0):
+    """The recurrent block: norm -> (gate branch || conv+RG-LRU branch) ->
+    out-proj -> +residual -> MLP."""
+    B, S, d = x.shape
+    dt = cdt(cfg)
+    h_in = rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h_in, p["in_gate"].astype(dt)))
+    u = jnp.einsum("bsd,dw->bsw", h_in, p["in_x"].astype(dt))
+    u = sharding.constrain(u, "act_batch", "act_seq", "act_lru")
+
+    conv_state = cache["conv"] if cache is not None else None
+    h0 = cache["h"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv"].astype(dt), conv_state)
+    rec, h_last = rglru_core(cfg, p, u, h0)
+    y = jnp.einsum("bsw,wd->bsd", (rec * gate).astype(dt),
+                   p["out"].astype(dt))
+    x = x + sharding.constrain(y, "act_batch", "act_seq", "act_embed")
+    if cfg.d_ff:
+        x = x + mlp_block(cfg, p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    new_cache = cache
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h_last.astype(jnp.float32),
+                     "pos": cache["pos"] + S}
+    return x, new_cache

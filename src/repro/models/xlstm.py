@@ -1,0 +1,246 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, sequential) with exponential gating and stabilizers.
+
+mLSTM runs in chunkwise-parallel form for train/prefill (O(S/chunk) sequential
+steps, intra-chunk parallel) and in pure recurrent form for decode; the
+step-by-step oracle lives in kernels/ref.py (mlstm_chunkwise).
+
+Block layout follows xLSTM[7:1]: mostly mLSTM blocks with a periodic sLSTM.
+The mLSTM block up-projects 2x (pre-LN residual), applies the cell over
+heads, gates the output, and down-projects; d_ff == 0 (no separate FFN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from ..kernels import ref as kref
+from ..sharding import annotate as A
+from .layers import _normal, cdt, pdt, init_rmsnorm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_layer(key, cfg):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    inner = 2 * d
+    H = cfg.n_heads
+    hd = inner // H
+    return {
+        "ln": init_rmsnorm(cfg),
+        "up_v": A(_normal(ks[0], (d, inner), pdt(cfg)), "w_embed", "w_inner"),
+        "up_g": A(_normal(ks[1], (d, inner), pdt(cfg)), "w_embed", "w_inner"),
+        # block-diagonal per-head projections (xLSTM implementation choice);
+        # 2-D sharded: contraction dim over data (FSDP), output over model
+        "wq": A(_normal(ks[2], (H, hd, hd), pdt(cfg)), None, "w_embed",
+                "w_inner"),
+        "wk": A(_normal(ks[3], (H, hd, hd), pdt(cfg)), None, "w_embed",
+                "w_inner"),
+        "wv": A(_normal(ks[4], (H, hd, hd), pdt(cfg)), None, "w_embed",
+                "w_inner"),
+        "w_i": A(_normal(ks[5], (inner, H), pdt(cfg)), "w_inner", None),
+        "b_i": A(jnp.zeros((H,), pdt(cfg)), None),
+        "w_f": A(_normal(ks[6], (inner, H), pdt(cfg)), "w_inner", None),
+        # forget bias init positive => long memory at init
+        "b_f": A(3.0 * jnp.ones((H,), pdt(cfg)), None),
+        "down": A(_normal(ks[7], (inner, d), pdt(cfg)), "w_inner", "w_embed"),
+    }
+
+
+def init_mlstm_cache(cfg, batch):
+    H = cfg.n_heads
+    hd = (2 * cfg.d_model) // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mlstm_gates(p, h, H, dt):
+    """log-space input/forget gates per head. h: (B,S,inner)."""
+    li = (jnp.einsum("bsi,ih->bsh", h, p["w_i"].astype(dt))
+          + p["b_i"].astype(dt)).astype(jnp.float32)
+    lf_pre = (jnp.einsum("bsi,ih->bsh", h, p["w_f"].astype(dt))
+              + p["b_f"].astype(dt)).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(lf_pre)
+    return log_f, li
+
+
+def mlstm_layer(cfg, p, x, *, positions=None, cache=None, mode="train",
+                window=0):
+    B, S, d = x.shape
+    dt = cdt(cfg)
+    H = cfg.n_heads
+    inner = 2 * d
+    hd = inner // H
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    hv = jnp.einsum("bsd,di->bsi", h_in, p["up_v"].astype(dt))
+    hg = jnp.einsum("bsd,di->bsi", h_in, p["up_g"].astype(dt))
+    hv = sharding.constrain(hv, "act_batch", "act_seq", "act_inner")
+    hvh = hv.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", hvh, p["wq"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", hvh, p["wk"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", hvh, p["wv"].astype(dt))
+    log_f, log_i = _mlstm_gates(p, hv, H, dt)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        out, (C, n, m) = kref.mlstm_chunkwise(
+            q, k, v, log_f, log_i, c0=cache["C"], n0=cache["n"], m0=cache["m"])
+        new_cache = {"C": C, "n": n, "m": m, "pos": cache["pos"] + 1}
+    else:
+        out, (C, n, m) = mlstm_chunkwise_parallel(q, k, v, log_f, log_i,
+                                                  chunk=cfg.mlstm_chunk)
+        new_cache = cache
+        if mode == "prefill" and cache is not None:
+            new_cache = {"C": C, "n": n, "m": m,
+                         "pos": cache["pos"] + S}
+    out = out.reshape(B, S, inner)
+    out = out * jax.nn.silu(hg)
+    y = jnp.einsum("bsi,id->bsd", out.astype(dt), p["down"].astype(dt))
+    return x + sharding.constrain(y, "act_batch", "act_seq", "act_embed"), \
+        new_cache
+
+
+def mlstm_chunkwise_parallel(q, k, v, log_f, log_i, *, chunk=256, eps=1e-6):
+    """Chunkwise-parallel mLSTM: sequential scan over chunks, parallel inside
+    each chunk (quadratic in chunk only).  Matches kernels/ref.py
+    mlstm_chunkwise to fp32 tolerance (tests sweep shapes).
+    """
+    B, S, H, D = q.shape
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    N = S // c
+    scale = D ** -0.5
+    qc = q.astype(jnp.float32).reshape(B, N, c, H, D) * scale
+    kc = k.astype(jnp.float32).reshape(B, N, c, H, D)
+    vc = v.astype(jnp.float32).reshape(B, N, c, H, D)
+    lf = log_f.astype(jnp.float32).reshape(B, N, c, H)
+    li = log_i.astype(jnp.float32).reshape(B, N, c, H)
+
+    # cumulative log forget within each chunk: F[t] = sum_{u<=t} lf[u]
+    Fc = jnp.cumsum(lf, axis=2)                       # (B,N,c,H)
+    Ftot = Fc[:, :, -1]                               # (B,N,H)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                  # (B,H,D,D), (B,H,D), (B,H)
+        qb, kb, vb, ib, Fb, Ftot_b = xs  # (B,c,H,D) / (B,c,H) / (B,H)
+        # source term s[j] = li[j] - F[j]; intra weight for j<=t is
+        # exp(F[t] + s[j] - m_t); inter (carry) weight is exp(F[t] + m - m_t)
+        s_src = ib - Fb                               # (B,c,H)
+        cummax_s = jax.lax.associative_scan(jnp.maximum, s_src, axis=1)
+        # per-position stabilizer (equals the sequential recursion's m_t):
+        m_t = jnp.maximum(Fb + m[:, None], Fb + cummax_s)   # (B,c,H)
+        logits = Fb[:, :, None] - Fb[:, None, :] + ib[:, None, :]  # (B,t,j,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        logits = jnp.where(tri[None, :, :, None], logits, -jnp.inf)
+        w = jnp.exp(logits - m_t[:, :, None])         # (B,t,j,H)
+        att = jnp.einsum("bthd,bjhd->btjh", qb, kb)   # (B,t,j,H)
+        num_intra = jnp.einsum("btjh,btjh,bjhd->bthd", att, w, vb)
+        den_intra = jnp.einsum("btjh,btjh->bth", att, w)
+        inter_w = jnp.exp(Fb + m[:, None] - m_t)      # (B,c,H)
+        num_inter = jnp.einsum("bthd,bhde->bthe", qb, C) * inter_w[..., None]
+        den_inter = jnp.einsum("bthd,bhd->bth", qb, n) * inter_w
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t)) + eps
+        out = num / den[..., None]
+        # carry update to the chunk end (t = c)
+        m_next = jnp.maximum(Ftot_b + m, Ftot_b + jnp.max(s_src, axis=1))
+        wC = jnp.exp(Ftot_b[:, None] + s_src - m_next[:, None])  # (B,c,H)
+        decay = jnp.exp(Ftot_b + m - m_next)
+        C_new = decay[:, :, None, None] * C \
+            + jnp.einsum("bjh,bjhd,bjhe->bhde", wC, kb, vb)
+        n_new = decay[:, :, None] * n + jnp.einsum("bjh,bjhd->bhd", wC, kb)
+        return (C_new, n_new, m_next), out
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(li, 1, 0),
+          jnp.moveaxis(Fc, 1, 0), jnp.moveaxis(Ftot, 1, 0))
+    (C, n, m), out = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, D)
+    return out.astype(q.dtype), (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln": init_rmsnorm(cfg),
+        # fused (z, i, f, o) input projection
+        "w_in": A(_normal(ks[0], (d, 4 * d), pdt(cfg)), "w_embed", "w_inner"),
+        "w_rec": A(_normal(ks[1], (d, 4 * d), pdt(cfg)), "w_embed", "w_inner"),
+        "bias": A(jnp.concatenate([jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)),
+                                   jnp.zeros((d,))]).astype(pdt(cfg)),
+                  "w_inner"),
+        "down": A(_normal(ks[2], (d, d), pdt(cfg)), "w_embed", "w_inner"),
+    }
+
+
+def init_slstm_cache(cfg, batch):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, d), -1e30,
+                                                        jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _slstm_cell(x_t, state):
+    """One sLSTM step with exponential gating + stabilizer.
+    x_t: (B, 4d) pre-activations (input part); state h used for recurrence."""
+    h, c, n, m, w_rec, bias = state
+    pre = x_t + h @ w_rec + bias
+    z, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_pre) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_layer(cfg, p, x, *, positions=None, cache=None, mode="train",
+                window=0):
+    B, S, d = x.shape
+    dt = cdt(cfg)
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    pre = jnp.einsum("bsd,dk->bsk", h_in, p["w_in"].astype(dt)) \
+        .astype(jnp.float32)
+    w_rec = p["w_rec"].astype(jnp.float32)
+    bias = p["bias"].astype(jnp.float32)
+    if cache is not None and mode == "decode":
+        h, c, n, m = cache["h"], cache["c"], cache["n"], cache["m"]
+    else:
+        zeros = jnp.zeros((B, d), jnp.float32)
+        h, c, n, m = zeros, zeros, zeros, jnp.full((B, d), -1e30, jnp.float32)
+
+    def step(carry, x_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(x_t, (h, c, n, m, w_rec, bias))
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h, c, n, m),
+                                    jnp.moveaxis(pre, 1, 0))
+    out = jnp.moveaxis(hs, 0, 1)                       # (B,S,d)
+    y = jnp.einsum("bsd,dk->bsk", out.astype(dt), p["down"].astype(dt))
+    new_cache = cache
+    if cache is not None and mode in ("decode", "prefill"):
+        new_cache = {"h": h, "c": c, "n": n, "m": m,
+                     "pos": cache["pos"] + S}
+    return x + sharding.constrain(y, "act_batch", "act_seq", "act_embed"), \
+        new_cache

@@ -1,0 +1,73 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Self-contained pytree implementation (no optax dependency).  Optimizer state
+mirrors the parameter tree, so the sharding rules that place parameters also
+place m/v (ZeRO-style when the FSDP rule set is active).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(step, *, base_lr, warmup_steps, total_steps,
+                    min_ratio=0.1):
+    # 1-indexed so the very first step takes a (small) non-zero update
+    step = step.astype(jnp.float32) + 1.0
+    warm = step / jnp.maximum(warmup_steps, 1)
+    frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    frac = jnp.clip(frac, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return base_lr * jnp.where(step < warmup_steps, warm, cos)
+
+
+def adamw_update(grads, state: AdamWState, params, *, learning_rate,
+                 beta1=0.9, beta2=0.95, eps=1e-8, weight_decay=0.1,
+                 grad_clip=1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if grad_clip else jnp.asarray(1.0)
+    step = state.step + 1
+    b1c = 1.0 - beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - beta2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - learning_rate * delta).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": jnp.asarray(learning_rate)}

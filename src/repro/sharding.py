@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules engine (MaxText-style, pjit/GSPMD).
+
+Every parameter and strategic activation carries a tuple of *logical* axis
+names.  A rule table maps logical names to mesh axes; ``spec_for`` resolves a
+(logical axes, shape) pair to a PartitionSpec, silently dropping mappings that
+do not divide the dimension (e.g. 9 attention heads over a 16-way model axis)
+or that would reuse a mesh axis twice - this is what lets one rule table
+drive all 10 assigned architectures on the fixed (16,16)/(2,16,16) meshes.
+
+Rule sets:
+  * RULES_BASELINE  - plain DP(+pod) x TP: batch over data, feature dims over
+    model, weights replicated over data (the paper-era default layout).
+  * RULES_FSDP      - beyond-paper optimized: 2-D weight sharding (contraction
+    dims over data => ZeRO-3), sequence-parallel residual stream, vocab-
+    sharded logits.  See EXPERIMENTS.md §Perf.
+
+The active (mesh, rules) pair is installed with ``use(mesh, rules)``;
+``constrain(x, *axes)`` is a no-op outside that context so model code runs
+unmodified in single-device tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import NamedTuple, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+class P(NamedTuple):
+    """An annotated parameter: value + logical axis names."""
+    value: jax.Array
+    axes: tuple
+
+
+def annotate(value, *axes):
+    assert len(axes) == len(value.shape), (axes, value.shape)
+    return P(value, tuple(axes))
+
+
+def split_annotated(tree):
+    """(params, axes) trees from a tree with P leaves."""
+    is_p = lambda x: isinstance(x, P)
+    params = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_p)
+    return params, axes
+
+
+RULES_BASELINE = {
+    # -- weights (TP only; replicated over data) --
+    "w_vocab": "model", "w_mlp": "model", "w_qdim": "model",
+    "w_kv_dim": "model", "w_lru": "model", "w_inner": "model",
+    "w_embed": None, "w_embed_in": None, "w_experts": "model",
+    "w_expert_ff": None, "w_conv": None, "layers": None,
+    # -- activations --
+    "act_batch": ("pod", "data"), "act_seq": None, "act_embed": None,
+    "act_vocab": "model", "act_heads": None, "act_mlp": "model",
+    "act_experts": "model", "act_lru": "model", "act_inner": "model",
+    # -- kv / recurrent caches --
+    "cache_batch": ("pod", "data"), "cache_seq": "model", "cache_kv": None,
+    "cache_dim": None,
+}
+
+# Beyond-paper optimized layout: ZeRO-3 weight sharding over `data`,
+# sequence-parallel residual stream over `model`.
+RULES_FSDP = dict(RULES_BASELINE)
+RULES_FSDP.update({
+    "w_embed": "data", "w_embed_in": "data", "w_expert_ff": "data",
+    "act_seq": "model",
+})
+
+# ZeRO-1: weights replicated over `data` (TP only, no per-layer gathers);
+# optimizer state sharded over `data` via the opt:: aliases.
+RULES_ZERO1 = dict(RULES_BASELINE)
+RULES_ZERO1.update({
+    "act_seq": "model",
+    "opt::w_embed": "data", "opt::w_embed_in": "data",
+    "opt::w_expert_ff": "data", "opt::w_conv": "data",
+})
+
+# Pure data parallelism over all 256(x2) chips: for small models where TP=16
+# collective traffic dominates; weights replicated, optimizer ZeRO-1 sharded.
+RULES_DP_ZERO1 = {
+    **{k: None for k in RULES_BASELINE},
+    "act_batch": ("pod", "data", "model"),
+    "cache_batch": ("pod", "data", "model"),
+    "opt::w_embed": "data", "opt::w_vocab": "model", "opt::w_mlp": "model",
+    "opt::w_qdim": "model", "opt::w_kv_dim": "model", "opt::w_lru": "model",
+    "opt::w_inner": "model", "opt::w_experts": "model",
+}
+
+RULE_SETS = {"baseline": RULES_BASELINE, "fsdp": RULES_FSDP,
+             "zero1": RULES_ZERO1, "dp_zero1": RULES_DP_ZERO1}
+
+OPT_PREFIX = "opt::"
+
+
+def opt_alias(axes: tuple) -> tuple:
+    """Rename weight logical axes for optimizer-state leaves: ``opt::name``
+    resolves to its own rule when the set defines one, else falls back to
+    the plain name."""
+    return tuple(None if a is None else
+                 (a if a == "layers" else OPT_PREFIX + a) for a in axes)
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: dict = RULES_BASELINE
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def use(mesh: Optional[Mesh], rules=RULES_BASELINE):
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    prev = (_ctx.mesh, _ctx.rules)
+    _ctx.mesh, _ctx.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Optional[Mesh] = None,
+             rules: Optional[dict] = None) -> PartitionSpec:
+    """Resolve logical axes to a PartitionSpec, enforcing divisibility and
+    one-use-per-mesh-axis."""
+    mesh = mesh or _ctx.mesh
+    rules = rules or _ctx.rules
+    if mesh is None:
+        return PartitionSpec()
+    used = set()
+    out = []
+    for name, dim in zip(axes, shape):
+        if name is not None and name.startswith(OPT_PREFIX):
+            rule = rules.get(name, rules.get(name[len(OPT_PREFIX):]))
+        else:
+            rule = rules.get(name)
+        if rule is None:
+            out.append(None)
+            continue
+        cand = (rule,) if isinstance(rule, str) else tuple(rule)
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        size = math.prod(mesh.shape[a] for a in cand) if cand else 1
+        if not cand or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(cand)
+        out.append(cand[0] if len(cand) == 1 else cand)
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def sharding_for(axes: tuple, shape: tuple, mesh: Optional[Mesh] = None,
+                 rules: Optional[dict] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _ctx.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical names; no-op with no active mesh
+    OR when no rule maps (an empty PartitionSpec would *force* replication -
+    e.g. 269 GB/chip of gathered logits under the dp_zero1 rules - whereas
+    the intent of an unmapped constraint is 'let GSPMD propagate')."""
+    mesh = _ctx.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(axes, x.shape, mesh, _ctx.rules)
+    if not any(s is not None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=RULES_BASELINE):
+    """NamedSharding pytree for a parameter tree (axes tree + shapes tree)."""
+    if isinstance(rules, str):
+        rules = RULE_SETS[rules]
+    return jax.tree_util.tree_map(
+        lambda ax, shp: NamedSharding(mesh, spec_for(ax, shp, mesh, rules)),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,101 @@
+"""Checkpoint manager: roundtrip, torn writes, schedules."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_latest, \
+    save_checkpoint
+from repro.core import distributions as D
+
+
+@pytest.fixture()
+def tmpdir(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(6).reshape(2, 3),
+                       "c": [jnp.ones(3), jnp.zeros(2)]}}
+
+
+def test_roundtrip(tmpdir):
+    tree = _tree()
+    save_checkpoint(tmpdir, 7, tree, {"note": "x"})
+    out = restore_latest(tmpdir, tree)
+    assert out is not None
+    restored, step, meta = out
+    assert step == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_wins_and_torn_write_skipped(tmpdir):
+    t1, t2 = _tree(1), _tree(2)
+    save_checkpoint(tmpdir, 10, t1)
+    save_checkpoint(tmpdir, 20, t2)
+    # corrupt the newest (simulate preemption mid-write)
+    path = os.path.join(tmpdir, "step_0000000020", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00" * 64)
+    restored, step, _ = restore_latest(tmpdir, t1)
+    assert step == 10, "corrupted checkpoint must be skipped"
+
+
+def test_async_write(tmpdir):
+    tree = _tree()
+    th = save_checkpoint(tmpdir, 3, tree, blocking=False)
+    th.join()
+    assert restore_latest(tmpdir, tree)[1] == 3
+
+
+def _mgr(tmpdir, policy, **kw):
+    return CheckpointManager(directory=tmpdir, dist=D.constrained_for(),
+                             policy=policy, step_time_hours=0.01,
+                             total_steps=1000, async_write=False, **kw)
+
+
+def test_dp_schedule_nonuniform(tmpdir):
+    """DP intervals at pod age 0 start short and lengthen."""
+    mgr = _mgr(tmpdir, "dp")
+    first = mgr._next_ckpt_step
+    tree = _tree()
+    mgr.save(first, tree)
+    second_gap = mgr._next_ckpt_step - first
+    assert second_gap >= first, "DP gaps should lengthen as hazard decays"
+
+
+def test_young_daly_schedule_uniform(tmpdir):
+    mgr = _mgr(tmpdir, "young_daly")
+    g1 = mgr._next_ckpt_step
+    mgr.save(g1, _tree())
+    g2 = mgr._next_ckpt_step - g1
+    assert g1 == g2, "Young-Daly is periodic"
+
+
+def test_emergency_save_is_blocking_and_counted(tmpdir):
+    mgr = _mgr(tmpdir, "dp")
+    mgr.on_preemption_warning(42, _tree())
+    assert mgr.n_emergency == 1
+    assert restore_latest(tmpdir, _tree())[1] == 42
+
+
+def test_restart_recomputes_schedule(tmpdir):
+    mgr = _mgr(tmpdir, "dp")
+    before = mgr._next_ckpt_step
+    mgr.on_restart(pod_age_hours=0.0, resumed_step=500)
+    after = mgr._next_ckpt_step
+    assert after > 500, "schedule must re-anchor at the resumed step"
+    assert after - 500 <= before * 2 + 1
+
+
+def test_policy_none(tmpdir):
+    mgr = _mgr(tmpdir, "none")
+    assert not mgr.should_checkpoint(10 ** 6)

@@ -1,0 +1,47 @@
+"""Data pipeline: determinism + elastic re-sharding contract."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SyntheticLM
+
+
+def test_step_addressable_determinism():
+    p = SyntheticLM(vocab_size=128, seq_len=16, global_batch=8, seed=3)
+    b1 = p.batch(12)
+    b2 = p.batch(12)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = p.batch(13)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    p = SyntheticLM(vocab_size=128, seq_len=16, global_batch=4, seed=0)
+    b = p.batch(0)
+    # labels[t] is the next token of the same underlying stream:
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+def test_replica_slices_partition_global_batch():
+    p = SyntheticLM(vocab_size=128, seq_len=8, global_batch=8, seed=1)
+    full_shape = p.batch(5, 0, 1)["tokens"].shape
+    halves = [p.batch(5, r, 2)["tokens"] for r in (0, 1)]
+    assert full_shape == (8, 8)
+    assert halves[0].shape == (4, 8)
+    # different replicas draw different streams
+    assert not np.array_equal(np.asarray(halves[0]), np.asarray(halves[1]))
+
+
+def test_learnable_structure():
+    """The Markov copy structure must make labels partially predictable."""
+    p = SyntheticLM(vocab_size=1024, seq_len=64, global_batch=16, seed=2)
+    b = p.batch(0)
+    toks = np.asarray(b["tokens"])
+    period = p.markov_period
+    idx = np.arange(toks.shape[1])
+    rep = (idx % period) >= (period // 2)
+    src = np.maximum(idx - period // 2, 0)
+    match = (toks[:, rep] == toks[:, src[rep]]).mean()
+    assert match > 0.9

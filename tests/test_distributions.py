@@ -1,0 +1,122 @@
+"""Property and invariant tests for the preemption probability models."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import distributions as D
+
+FAMILIES = {
+    "constrained": lambda: D.Constrained(tau1=1.0, tau2=0.8, b=24.0, A=0.475),
+    "exponential": lambda: D.Exponential(mttf=6.0),
+    "weibull": lambda: D.Weibull(lam=0.15, k=0.8),
+    "gompertz_makeham": lambda: D.GompertzMakeham(),
+    "uniform": lambda: D.Uniform(),
+}
+
+params_strategy = st.fixed_dictionaries({
+    "tau1": st.floats(0.3, 5.0),
+    "tau2": st.floats(0.3, 2.0),
+    "b": st.floats(20.0, 26.0),
+    "A": st.floats(0.3, 0.5),
+})
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_cdf_monotone_and_bounded(family):
+    d = FAMILIES[family]()
+    t = jnp.linspace(0.0, 24.0, 512)
+    f = np.asarray(d.cdf(t))
+    assert np.all(f >= -1e-6) and np.all(f <= 1 + 1e-6)
+    assert np.all(np.diff(f) >= -1e-6), "CDF must be nondecreasing"
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_pdf_is_cdf_derivative(family):
+    d = FAMILIES[family]()
+    t = jnp.linspace(0.1, 23.9, 64)
+    eps = 1e-3
+    numeric = (d.cdf(t + eps) - d.cdf(t - eps)) / (2 * eps)
+    np.testing.assert_allclose(np.asarray(d.pdf(t)), np.asarray(numeric),
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_partial_expectation_matches_quadrature(family):
+    d = FAMILIES[family]()
+    a, b = 2.0, 17.0
+    closed = float(d.partial_expectation(a, b))
+    numeric = float(D._gauss_legendre(lambda x: x * d.pdf(x), a, b))
+    np.testing.assert_allclose(closed, numeric, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(params_strategy)
+def test_constrained_invariants(p):
+    d = D.Constrained(**p)
+    t = jnp.linspace(0.0, 24.0, 128)
+    f = np.asarray(d.cdf(t))
+    assert np.all(np.diff(f) >= -1e-5)
+    assert np.all(np.asarray(d.pdf(t)) >= 0)
+    # hazard >= 0 wherever survival is meaningfully positive
+    surv = np.asarray(d.survival(t))
+    lam = np.asarray(d.hazard(t))
+    assert np.all(lam[surv > 1e-3] >= -1e-6)
+    # partial expectations are additive
+    ab = float(d.partial_expectation(0.0, 10.0))
+    bc = float(d.partial_expectation(10.0, 24.0))
+    ac = float(d.partial_expectation(0.0, 24.0))
+    np.testing.assert_allclose(ab + bc, ac, rtol=1e-4, atol=1e-5)
+
+
+def test_constrained_bathtub_shape():
+    d = FAMILIES["constrained"]()
+    lam = d.hazard
+    early, mid, late = float(lam(0.2)), float(lam(12.0)), float(lam(23.8))
+    assert early > 10 * mid, "early hazard must dominate the stable phase"
+    assert late > 10 * mid, "deadline hazard must dominate the stable phase"
+
+
+def test_sampling_matches_cdf():
+    d = FAMILIES["constrained"]()
+    s = d.sample(jax.random.PRNGKey(0), (40000,))
+    assert float(s.min()) >= 0 and float(s.max()) <= 24.0
+    for t in (1.0, 3.0, 12.0, 23.0):
+        emp = float((s <= t).mean())
+        np.testing.assert_allclose(emp, float(d.cdf(t)), atol=0.02)
+    # mass at the hard cap equals the survivor probability
+    np.testing.assert_allclose(float((s >= 23.999).mean()),
+                               float(d.survival(24.0)), atol=0.02)
+
+
+def test_expected_lifetime_closed_form_vs_mc():
+    d = FAMILIES["constrained"]()
+    s = np.asarray(d.sample(jax.random.PRNGKey(1), (60000,)))
+    # Eq. 3 excludes the cap atom; E[min(T,L)] includes it
+    np.testing.assert_allclose(float(d.mean_lifetime_capped()), s.mean(),
+                               rtol=0.03)
+
+
+def test_hazard_matches_paper_asymptotics():
+    """Eq. 5: lambda(t) ~ r1 for 0 < t << b (the paper's limit check)."""
+    d = D.Constrained(tau1=1.0, tau2=0.8, b=24.0, A=0.999999)
+    # with A ~ 1 the small-t hazard approaches r1 = 1/tau1
+    np.testing.assert_allclose(float(d.hazard(0.05)), 1.0, rtol=0.15)
+
+
+def test_vm_type_ordering():
+    """Obs. 4: larger VMs preempt faster (higher early CDF)."""
+    f3 = [float(D.constrained_for(v).cdf(3.0))
+          for v in ("n1-highcpu-2", "n1-highcpu-8", "n1-highcpu-32")]
+    assert f3[0] < f3[1] < f3[2]
+
+
+def test_empirical_cdf_roundtrip():
+    d = FAMILIES["constrained"]()
+    s = d.sample(jax.random.PRNGKey(2), (5000,))
+    emp = D.Empirical.from_samples(s)
+    t = jnp.linspace(0.5, 23.5, 32)
+    np.testing.assert_allclose(np.asarray(emp.cdf(t)), np.asarray(d.cdf(t)),
+                               atol=0.03)

@@ -1,0 +1,163 @@
+"""Kernel sweeps: every Pallas kernel (interpret=True on CPU) and every XLA
+production implementation against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention as pl_decode
+from repro.kernels.flash_attention import flash_attention as pl_flash
+from repro.kernels.rglru_scan import linear_recurrence as pl_linrec
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, Sq, Sk, H, KV, D, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, KV, D, causal, window
+    (2, 128, 128, 4, 2, 32, True, 0),
+    (1, 256, 256, 6, 2, 64, True, 0),
+    (2, 128, 128, 3, 3, 32, False, 0),
+    (1, 256, 256, 2, 1, 64, True, 64),
+    (1, 64, 64, 9, 3, 64, True, 0),      # smollm-like head count
+    (2, 64, 64, 4, 4, 128, True, 0),     # MHA, wide head
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_matches_ref(case, dtype):
+    B, Sq, Sk, H, KV, D, causal, window = case
+    q, k, v = _qkv(B, Sq, Sk, H, KV, D, dtype)
+    o_ref = ref.attention(q, k, v, causal=causal, window=window)
+    o_pl = pl_flash(q, k, v, causal=causal, window=window, block_q=64,
+                    block_k=64, interpret=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("case", FLASH_CASES[:4])
+def test_xla_flash_matches_ref(case):
+    B, Sq, Sk, H, KV, D, causal, window = case
+    q, k, v = _qkv(B, Sq, Sk, H, KV, D, jnp.float32)
+    o_ref = ref.attention(q, k, v, causal=causal, window=window)
+    o_fl = ops.flash_attention_xla(q, k, v, causal, window, None, 64, 64)
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref), atol=2e-5)
+
+
+def test_xla_flash_gradients_match_ref():
+    q, k, v = _qkv(2, 128, 128, 4, 2, 32, jnp.float32)
+
+    def loss_fl(q, k, v):
+        return (ops.flash_attention_xla(q, k, v, True, 0, None, 64, 64)
+                ** 2).sum()
+
+    def loss_ref(q, k, v):
+        return (ref.attention(q, k, v, causal=True) ** 2).sum()
+
+    g1 = jax.grad(loss_fl, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3,
+                                   rtol=1e-4)
+
+
+def test_xla_flash_uneven_block_sizes():
+    """Block pick must handle sequence lengths not divisible by defaults."""
+    q, k, v = _qkv(1, 96, 96, 2, 2, 16, jnp.float32)
+    o_ref = ref.attention(q, k, v, causal=True)
+    o_fl = ops.flash_attention_xla(q, k, v, True, 0, None, 512, 512)
+    np.testing.assert_allclose(np.asarray(o_fl), np.asarray(o_ref), atol=2e-5)
+
+
+DECODE_CASES = [
+    (2, 128, 4, 2, 32, 100),
+    (1, 256, 6, 3, 64, 256),
+    (2, 64, 3, 1, 32, 64),
+    (4, 128, 8, 8, 64, 77),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_decode_matches_ref(case, dtype):
+    B, S, H, KV, D, ln = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, S, KV, D), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, S, KV, D), jnp.float32).astype(dtype)
+    lengths = jnp.full((B,), ln, jnp.int32)
+    o_ref = ref.decode_attention(q, kc, vc, lengths)
+    o_pl = pl_decode(q, kc, vc, lengths, block_k=32, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+LINREC_CASES = [(2, 64, 32), (1, 128, 16), (3, 96, 8), (2, 256, 64)]
+
+
+@pytest.mark.parametrize("case", LINREC_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_linrec_matches_ref(case, dtype):
+    B, S, W = case
+    ks = jax.random.split(KEY, 3)
+    a = jax.random.uniform(ks[0], (B, S, W), minval=0.8,
+                           maxval=0.999).astype(dtype)
+    b = (0.1 * jax.random.normal(ks[1], (B, S, W))).astype(dtype)
+    h0 = (0.1 * jax.random.normal(ks[2], (B, W))).astype(dtype)
+    hr, hlr = ref.linear_recurrence(a, b, h0)
+    hp, hlp = pl_linrec(a, b, h0, block_s=32, interpret=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(hp, np.float32),
+                               np.asarray(hr, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(hlp, np.float32),
+                               np.asarray(hlr, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("case", LINREC_CASES)
+def test_assoc_linrec_matches_ref(case):
+    B, S, W = case
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.uniform(ks[0], (B, S, W), minval=0.8, maxval=0.999)
+    b = 0.1 * jax.random.normal(ks[1], (B, S, W))
+    hr, hlr = ref.linear_recurrence(a, b)
+    ha, hla = ops.linear_recurrence(a, b, impl="assoc")
+    np.testing.assert_allclose(np.asarray(ha), np.asarray(hr), atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunkwise_matches_sequential(chunk):
+    from repro.models.xlstm import mlstm_chunkwise_parallel
+    B, S, H, D = 2, 64, 3, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    lf = jax.nn.log_sigmoid(2.0 + jax.random.normal(ks[3], (B, S, H)))
+    li = 0.5 * jax.random.normal(ks[4], (B, S, H))
+    o_ref, (C1, n1, m1) = ref.mlstm_chunkwise(q, k, v, lf, li)
+    o_par, (C2, n2, m2) = mlstm_chunkwise_parallel(q, k, v, lf, li,
+                                                   chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o_par), np.asarray(o_ref),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(C2), np.asarray(C1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(m1), atol=1e-5)
+
+
+def test_decode_consistent_with_attention():
+    """decode(q) == attention with Sq=1 at the last position."""
+    q, k, v = _qkv(2, 64, 64, 4, 2, 32, jnp.float32)
+    lengths = jnp.full((2,), 64, jnp.int32)
+    od = ref.decode_attention(q[:, -1], k, v, lengths)
+    oa = ref.attention(q[:, -1:], k, v, causal=True)[:, 0]
+    np.testing.assert_allclose(np.asarray(od), np.asarray(oa), atol=1e-6)

@@ -1,0 +1,38 @@
+"""Online model maintenance: refitting + change-point detection."""
+import jax
+import numpy as np
+
+from repro.core import distributions as D
+from repro.core import simulator as S
+from repro.core.online import OnlineModelTracker
+
+
+def test_tracker_converges_to_fleet_behavior():
+    gt = S.ground_truth_for("n1-highcpu-16")
+    samples = np.asarray(gt.sample(jax.random.PRNGKey(0), (512,)))
+    trk = OnlineModelTracker(min_samples=128, refit_every=128)
+    for x in samples:
+        trk.observe(x)
+    assert trk.n_refits >= 2
+    d = trk.model
+    # fitted parameters in the paper's ranges
+    assert 0.4 <= float(d.tau1) <= 2.5
+    assert 23.0 <= float(d.b) <= 25.0
+    assert trk.change_points == 0, "stationary fleet: no change points"
+
+
+def test_tracker_detects_policy_change():
+    """Fleet switches from gentle to aggressive preemption mid-stream: the
+    tracker must flag a change point and adapt the model."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    gentle = np.asarray(S.ground_truth_for("n1-highcpu-2").sample(k1, (384,)))
+    harsh = np.asarray(S.ground_truth_for("n1-highcpu-32").sample(k2, (384,)))
+    trk = OnlineModelTracker(min_samples=128, refit_every=128, window=384)
+    for x in gentle:
+        trk.observe(x)
+    f3_before = float(trk.model.cdf(3.0))
+    for x in harsh:
+        trk.observe(x)
+    f3_after = float(trk.model.cdf(3.0))
+    assert trk.change_points >= 1, "policy change must be detected"
+    assert f3_after > f3_before + 0.1, "model must adapt to faster preemption"

@@ -1,0 +1,167 @@
+"""Policy tests: Eq. 6-15 quantities + the paper's headline claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributions as D
+from repro.core.policies import checkpointing as C
+from repro.core.policies import scheduling as S
+from repro.core.policies import young_daly as YD
+
+
+@pytest.fixture(scope="module")
+def dist():
+    return D.constrained_for("n1-highcpu-16")
+
+
+# ---------------------------------------------------------------------------
+# scheduling (Eq. 6-10, Fig. 5-6)
+# ---------------------------------------------------------------------------
+
+def test_wasted_work_below_uniform_for_long_jobs(dist):
+    """Fig. 5a: bathtub wasted work << uniform (J/2) for long jobs."""
+    uni = D.Uniform()
+    for T in (6.0, 10.0, 15.0):
+        w_bath = float(S.expected_wasted_work(dist, T))
+        w_uni = float(S.expected_wasted_work(uni, T))
+        np.testing.assert_allclose(w_uni, T / 2, rtol=1e-3)
+        assert w_bath < 0.5 * w_uni, T
+
+
+def test_runtime_increase_crossover(dist):
+    """Fig. 5b: bathtub worse for short jobs, crossover ~5h, much better
+    after; 10h-job increase ~minutes vs hours for uniform."""
+    uni = D.Uniform()
+    inc = lambda d, T: float(S.expected_runtime_increase(d, T))
+    assert inc(dist, 1.0) > inc(uni, 1.0)          # short jobs: bathtub worse
+    assert inc(dist, 10.0) < 0.5 * inc(uni, 10.0)  # long jobs: much better
+    # uniform increase is quadratic: J^2/48
+    np.testing.assert_allclose(inc(uni, 12.0), 12.0 ** 2 / 48, rtol=1e-3)
+    # crossover in the paper's stated 3-7h band
+    diffs = [(T, inc(dist, T) - inc(uni, T)) for T in np.arange(1, 10, 0.5)]
+    cross = next(T for T, d in diffs if d < 0)
+    assert 2.0 <= cross <= 7.0
+
+
+def test_memoryless_always_fails_near_deadline(dist):
+    """Fig. 6a: a 6h job started after 18h always fails under memoryless
+    reuse; the policy switches to a fresh VM and caps the risk at F(6)."""
+    for s in (18.5, 20.0, 22.0):
+        assert float(S.job_failure_prob_memoryless(dist, 6.0, s)) == 1.0
+        p = float(S.job_failure_prob_policy(dist, 6.0, s))
+        np.testing.assert_allclose(p, float(dist.cdf(6.0)), atol=1e-3)
+        assert p < 0.55
+
+
+def test_policy_reduces_mean_failure_probability(dist):
+    """Fig. 6b: model-based scheduling roughly halves failure probability."""
+    for T in (4.0, 6.0, 8.0):
+        pol = float(S.mean_failure_prob_over_starts(dist, T))
+        mem = float(S.mean_failure_prob_over_starts(dist, T, policy=False))
+        assert pol < 0.75 * mem, (T, pol, mem)
+    # mid-length jobs: close to the paper's 2x
+    pol6 = float(S.mean_failure_prob_over_starts(dist, 6.0))
+    mem6 = float(S.mean_failure_prob_over_starts(dist, 6.0, policy=False))
+    assert mem6 / pol6 > 1.4
+
+
+def test_failure_prob_bathtub_in_start_time(dist):
+    """Fig. 6a: conditional job-failure probability is bathtub in s."""
+    p = [float(S.job_failure_prob_memoryless(dist, 6.0, s))
+         for s in (0.0, 8.0, 17.9)]
+    assert p[0] > 5 * p[1] and p[2] > 5 * p[1]
+
+
+def test_reuse_decision_stable_phase(dist):
+    """VMs in the stable phase should be reused (the paper's 'valuable'
+    hot spares); VMs near the deadline should not."""
+    assert bool(S.reuse_decision(dist, 4.0, 6.0))
+    assert bool(S.reuse_decision(dist, 4.0, 12.0))
+    assert not bool(S.reuse_decision(dist, 6.0, 19.0))
+
+
+def test_expected_makespan_matches_paper_forms(dist):
+    """E[T] = T + int_0^T t f dt (Eq. 9); E[W1] = that integral / F(T)."""
+    T = 5.0
+    integral = float(dist.partial_expectation(0.0, T))
+    np.testing.assert_allclose(float(S.expected_makespan_new(dist, T)),
+                               T + integral, rtol=1e-6)
+    np.testing.assert_allclose(float(S.expected_wasted_work(dist, T)),
+                               integral / float(dist.cdf(T)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (Eq. 11-15, Fig. 7)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tables(dist):
+    return C.solve(dist, 300, grid_dt=1.0 / 60.0, delta_steps=1, n_sweeps=3)
+
+
+def test_dp_intervals_lengthen_at_age_zero(dist, tables):
+    """The paper's 5h-job schedule (15,28,38,59,128)min: intervals grow as
+    the hazard decays."""
+    sched = C.extract_schedule(tables, 300, 0)
+    assert len(sched) >= 3
+    assert sched == sorted(sched), "intervals must be nondecreasing"
+    assert 5 <= sched[0] <= 40, "first interval ~15min (1-min grid)"
+    assert sched[-1] >= 2 * sched[0]
+
+
+def test_dp_skips_checkpoints_in_stable_phase(dist, tables):
+    """A 4h job launched at age 6h faces ~zero hazard: the DP writes few or
+    no checkpoints (vs Young-Daly's 22)."""
+    sched = C.extract_schedule(tables, 240, 6 * 60)
+    assert len(sched) <= 3
+
+
+def test_dp_checkpoints_before_deadline_wall(dist, tables):
+    """A job running into the 24h wall must checkpoint tightly before it."""
+    sched = C.extract_schedule(tables, 300, 20 * 60)  # 5h job at age 20h
+    assert len(sched) >= 3, "must checkpoint aggressively near the wall"
+
+
+def test_value_function_monotone(tables):
+    """V(j, t) nondecreasing in j (more work can't cost less)."""
+    V = tables.V
+    assert np.all(np.diff(V[:, 0]) >= -1e-5)
+    assert np.all(np.diff(V[:, 360]) >= -1e-5)
+
+
+def test_mc_dp_beats_young_daly_and_none(dist, tables):
+    """Fig. 7: DP < Young-Daly < no-checkpointing expected makespan."""
+    lf = C.model_lifetimes_fn(dist)
+    kw = dict(grid_dt=1.0 / 60.0, delta_steps=1, n_trials=400, seed=11)
+    dp = C.simulate_makespan(C.dp_policy_fn(tables), lf, 300, **kw).mean()
+    yd = C.simulate_makespan(
+        C.young_daly_policy_fn(float(YD.interval(1 / 60.0, 1.0)), 1 / 60.0),
+        lf, 300, **kw).mean()
+    none = C.simulate_makespan(C.no_checkpoint_policy_fn(), lf, 300,
+                               **kw).mean()
+    assert dp < yd < none
+    assert (dp / 5.0 - 1.0) < 0.10, "DP overhead <10% even from age 0"
+
+
+def test_stable_phase_overhead_below_paper_bound(dist, tables):
+    """Fig. 7a: <5% overhead for jobs launched when the VM is 5-15h old."""
+    lf = C.model_lifetimes_fn(dist)
+    mc = C.simulate_makespan(C.dp_policy_fn(tables), lf, 240, start_age=6.0,
+                             grid_dt=1 / 60.0, n_trials=400, seed=5)
+    assert mc.mean() / 4.0 - 1.0 < 0.05
+
+
+def test_young_daly_analytic_matches_paper_quote():
+    """The paper's '>25%' Young-Daly overhead at MTTF=1h, delta=1min is the
+    model-predicted overhead (delta/tau + tau/2MTTF + restart)."""
+    ov = YD.expected_overhead(1 / 60.0, 1.0, restart_overhead=2 / 60.0)
+    assert 0.18 < ov < 0.30
+
+
+def test_restart_age_conditioning(dist, tables):
+    """Lifetimes for a job starting at age s must be conditioned on
+    survival to s (no instant bogus failures)."""
+    lf = C.model_lifetimes_fn(dist)
+    rng = np.random.default_rng(0)
+    draws = lf(rng, 2000, min_age=6.0)
+    assert draws.min() >= 6.0

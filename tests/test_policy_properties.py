@@ -1,0 +1,75 @@
+"""Property-based tests (hypothesis) on the DP checkpointing policy and the
+scheduling quantities - system invariants that must hold for ANY plausible
+model parameters, not just the calibrated ones."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import distributions as D
+from repro.core.policies import checkpointing as C
+from repro.core.policies import scheduling as S
+
+params = st.fixed_dictionaries({
+    "tau1": st.floats(0.5, 2.0),
+    "tau2": st.floats(0.5, 1.2),
+    "b": st.floats(23.0, 24.5),
+    "A": st.floats(0.35, 0.5),
+})
+
+
+@settings(max_examples=10, deadline=None)
+@given(params)
+def test_failure_probabilities_are_probabilities(p):
+    d = D.Constrained(**p)
+    for T in (1.0, 6.0, 12.0):
+        for s in (0.0, 6.0, 18.0, 23.0):
+            for fn in (S.p_fail_existing, ):
+                v = float(fn(d, T, s))
+                assert 0.0 <= v <= 1.0
+            v = float(S.p_fail_new(d, T))
+            assert 0.0 <= v <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(params)
+def test_makespan_at_least_job_length(p):
+    d = D.Constrained(**p)
+    for T in (1.0, 5.0, 10.0):
+        assert float(S.expected_makespan_new(d, T)) >= T - 1e-6
+        m = float(S.expected_makespan_at_age(d, T, 6.0))
+        assert m >= T - 1e-6 or m == np.inf
+
+
+@settings(max_examples=6, deadline=None)
+@given(params, st.integers(60, 240))
+def test_dp_value_bounds(p, job_steps):
+    """V(j, t) between the bare work time and a generous blowup bound, and
+    monotone in j."""
+    d = D.Constrained(**p)
+    tab = C.solve(d, job_steps, grid_dt=1.0 / 12.0, delta_steps=1,
+                  n_sweeps=2)
+    dt = 1.0 / 12.0
+    V = tab.V
+    work = np.arange(V.shape[0]) * dt
+    assert np.all(V[:, 0] >= work - 1e-4)
+    assert np.all(np.diff(V[:, 0]) >= -1e-4)
+
+
+def test_dp_intervals_shrink_with_cheaper_checkpoints():
+    """delta -> 0 should never lengthen the optimal first interval."""
+    d = D.constrained_for()
+    t_cheap = C.solve(d, 120, grid_dt=1.0 / 12.0, delta_steps=1)
+    t_dear = C.solve(d, 120, grid_dt=1.0 / 12.0, delta_steps=4)
+    i_cheap = C.extract_schedule(t_cheap, 120, 0)[0]
+    i_dear = C.extract_schedule(t_dear, 120, 0)[0]
+    assert i_cheap <= i_dear
+
+
+def test_dp_degenerates_to_no_checkpoint_when_safe():
+    """With a near-zero-hazard stable phase and a short job started there,
+    the optimal schedule is a single segment."""
+    d = D.Constrained(tau1=0.5, tau2=0.5, b=24.0, A=0.45)
+    tab = C.solve(d, 24, grid_dt=1.0 / 12.0, delta_steps=2)
+    sched = C.extract_schedule(tab, 24, 8 * 12)   # 2h job at age 8h
+    assert len(sched) == 1

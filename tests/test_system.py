@@ -1,0 +1,121 @@
+"""End-to-end behaviour tests: the paper's policies running inside the
+training loop and the batch service."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.core import distributions as D
+from repro.core import service as SV
+from repro.fault import PreemptionSource, StragglerWatchdog, \
+    plan_elastic_remesh
+from repro.launch.train import train
+
+
+@pytest.fixture()
+def tiny_cfg():
+    return dataclasses.replace(configs.smoke("smollm-135m"), n_layers=2,
+                               d_model=32, d_ff=64, vocab_size=256)
+
+
+def test_train_loss_decreases(tiny_cfg, tmp_path):
+    tc = TrainConfig(ckpt_dir=str(tmp_path), ckpt_policy="dp",
+                     warmup_steps=5)
+    res = train(tiny_cfg, tc, total_steps=60, verbose=False)
+    assert res.steps_run == 60
+    assert res.final_loss < np.mean(res.losses[:5]) - 0.1, \
+        "loss must decrease on the structured synthetic stream"
+    assert res.checkpoints >= 1
+
+
+def test_train_survives_preemptions_and_resumes(tiny_cfg, tmp_path):
+    """Preemption mid-run: emergency checkpoint + restore + replay; the
+    trainer must still complete all steps."""
+    tc = TrainConfig(ckpt_dir=str(tmp_path), ckpt_policy="dp",
+                     warmup_steps=5)
+    res = train(tiny_cfg, tc, total_steps=50, inject_preemptions=True,
+                sim_hours_per_step=0.25, preemption_seed=3, verbose=False)
+    assert res.restarts >= 1, "the 0.25h/step clock must cross a preemption"
+    assert res.emergency_checkpoints >= 1
+    assert res.steps_run >= 50
+
+
+def test_deterministic_replay_after_restart(tiny_cfg, tmp_path):
+    """A run with preemptions must end at the same final params/loss as an
+    uninterrupted run (checkpoint + pipeline replay = exactly-once)."""
+    tc1 = TrainConfig(ckpt_dir=str(tmp_path / "a"), ckpt_policy="dp",
+                      warmup_steps=5)
+    clean = train(tiny_cfg, tc1, total_steps=40, verbose=False)
+    tc2 = TrainConfig(ckpt_dir=str(tmp_path / "b"), ckpt_policy="dp",
+                      warmup_steps=5)
+    bumpy = train(tiny_cfg, tc2, total_steps=40, inject_preemptions=True,
+                  sim_hours_per_step=0.3, preemption_seed=3, verbose=False)
+    assert bumpy.restarts >= 1
+    np.testing.assert_allclose(bumpy.losses[-1], clean.losses[-1],
+                               rtol=1e-4)
+
+
+def test_preemption_source_statistics():
+    """Simulated pod lifetimes follow the model (KS-style bound)."""
+    dist = D.constrained_for()
+    src = PreemptionSource(dist, n_pods=500, seed=0)
+    lt = src.lifetimes
+    assert abs((lt < 3.0).mean() - float(dist.cdf(3.0))) < 0.07
+    assert lt.max() <= 24.0
+
+
+def test_preemption_warning_window():
+    dist = D.constrained_for()
+    src = PreemptionSource(dist, n_pods=1, seed=1)
+    kill = src.launch_age[0] + src.lifetimes[0]
+    warn = kill - 30.0 / 3600.0
+    assert not src.poll(warn - 1e-4)
+    events = src.poll(warn + 1e-4)
+    assert len(events) == 1
+    assert events[0].preempt_at_hours == pytest.approx(kill)
+    # idempotent
+    assert not src.poll(kill + 1.0)
+
+
+def test_elastic_remesh_plans():
+    p = plan_elastic_remesh(2, [1])
+    assert p.mesh_shape == (16, 16) and p.batch_scale == 0.5
+    p3 = plan_elastic_remesh(4, [2])
+    assert p3.mesh_shape == (3, 16, 16) and p3.mesh_axes[0] == "pod"
+    with pytest.raises(RuntimeError):
+        plan_elastic_remesh(2, [0, 1])
+
+
+def test_straggler_watchdog():
+    dog = StragglerWatchdog(threshold=2.0)
+    for _ in range(16):
+        dog.observe(1.0)
+    assert not dog.observe(1.1)
+    assert dog.observe(5.0)
+    assert dog.flagged == 1
+
+
+def test_batch_service_cost_reduction():
+    """Fig. 8a: ~5x cheaper than on-demand (price ratio caps at 4.9x)."""
+    dist = D.constrained_for("n1-highcpu-32")
+    r = SV.run_bag(dist, n_jobs=60, job_hours=2.0, cluster_size=16, seed=3)
+    assert all(j.finished is not None for j in r.jobs)
+    assert r.cost_reduction > 3.5
+    assert r.n_preemptions > 0, "preemptions must actually occur in the sim"
+
+
+def test_batch_service_preemption_overhead_linear():
+    """Fig. 8b: each preemption costs ~small% extra running time; more
+    preemptions => more makespan (monotone-ish trend over seeds)."""
+    dist = D.constrained_for("n1-highcpu-32")
+    rows = []
+    for seed in range(6):
+        r = SV.run_bag(dist, n_jobs=40, job_hours=2.0, cluster_size=8,
+                       seed=seed)
+        rows.append((r.n_preemptions, r.vm_hours))
+    rows.sort()
+    lo = np.mean([v for n, v in rows[:3]])
+    hi = np.mean([v for n, v in rows[3:]])
+    assert hi >= lo * 0.98, "vm-hours should not shrink with more preemptions"

@@ -1,0 +1,61 @@
+"""Tonks-gas lemma tests (constrained preemptions <-> hard rods)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tonks
+
+
+def test_partition_function():
+    assert float(tonks.partition_function(3, 24.0, 0.5)) == (24 - 1.5) ** 3
+    # Z_{N-1} on the effective deadline L-w has the SAME excluded volume
+    # L_e = L - Nw as the original N-preemption system (the paper's
+    # 'fortuitous result'): (L-w) - (N-1)w = L - Nw.
+    N, L, w = 6, 24.0, 0.3
+    le = L - N * w
+    np.testing.assert_allclose(
+        float(tonks.partition_function(N - 1, L - w, w)), le ** (N - 1),
+        rtol=1e-5)
+    np.testing.assert_allclose(float(tonks.p_boundary(N, L, w)), 1.0 / le)
+
+
+def test_boundary_probability_exceeds_uniform():
+    """The lemma: P(L - w) = 1/(L - Nw) > 1/L for any N >= 1, w > 0."""
+    for N in (1, 4, 10):
+        for w in (0.1, 0.3, 1.0):
+            assert float(tonks.p_boundary(N, 24.0, w)) > 1.0 / 24.0
+
+
+def test_mc_matches_exact_boundary():
+    mc, exact = tonks.boundary_enhancement(jax.random.PRNGKey(0), 300000,
+                                           N=6, L=24.0, w=0.3)
+    np.testing.assert_allclose(float(mc), float(exact), rtol=0.1)
+
+
+def test_density_enhanced_over_uniform():
+    """The Lemma's quantitative content: mutual exclusion compresses the
+    accessible 'temporal volume' to L - Nw, so the per-preemption start
+    density on its support sits at ~1/(L - Nw) > 1/L (the uniform-over-L
+    expectation), with the same enhancement at the endpoints (the P(eps),
+    P(L-eps) > 1/L statement)."""
+    N, L, w = 6, 24.0, 0.3
+    c, rho = tonks.start_density(jax.random.PRNGKey(1), 60000, N=N, L=L,
+                                 w=w, n_bins=48)
+    rho = np.asarray(rho)
+    uniform = 1.0 / L
+    enhanced = 1.0 / (L - N * w)
+    # endpoint bins (within the support) exceed the uniform baseline and
+    # track the excluded-volume value
+    np.testing.assert_allclose(rho[0], enhanced, rtol=0.1)
+    assert rho[0] > uniform
+    np.testing.assert_allclose(rho[16:32].mean(), enhanced, rtol=0.1)
+    # integrates to ~1
+    np.testing.assert_allclose(rho.sum() * (L / 48), 1.0, rtol=0.02)
+
+
+def test_configurations_respect_exclusion():
+    x = tonks.sample_configurations(jax.random.PRNGKey(2), 2000, N=5,
+                                    L=24.0, w=0.5)
+    gaps = np.diff(np.asarray(x), axis=1)
+    assert gaps.min() >= 0.5 - 1e-6, "preemptions must not overlap"
+    assert np.asarray(x).max() <= 24.0 - 0.5 + 1e-6
