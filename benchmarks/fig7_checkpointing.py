@@ -1,17 +1,21 @@
 """Paper Fig. 7: DP model-based checkpointing vs Young-Daly (MTTF=1h) vs no
 checkpointing - expected running-time increase by start age (a) and job
-length (b), via the Monte-Carlo executor."""
+length (b), via the vectorized Monte-Carlo engine (repro.core.engine; same
+seed => same lifetime draws as the retained Python reference executor)."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import distributions as D
+from repro.core import engine as E
 from repro.core.policies import checkpointing as C
 from repro.core.policies import young_daly as YD
 
 from .common import emit, timed
 
 GRID = 1.0 / 60.0
+N_TRIALS = 600
+SEED = 17
 
 
 def run():
@@ -26,25 +30,28 @@ def run():
          + "(paper 15/28/38/59/128)")
     lf = C.model_lifetimes_fn(dist)
     tau = float(YD.interval(GRID, 1.0))
-    kw = dict(grid_dt=GRID, delta_steps=1, n_trials=600, seed=17)
+    dp_tab = E.dp_policy_table(tables)
+    yd_tab = E.young_daly_policy_table(max(1, int(round(tau / GRID))), 720)
+    nc_tab = E.no_checkpoint_policy_table(720)
+
+    def sim(tab, J, **k):
+        return E.simulate_makespan_engine(
+            tab, lf, J, grid_dt=GRID, delta_steps=1, n_trials=N_TRIALS,
+            seed=SEED, **k)
 
     # Fig 7a: 4h job, varying start age
     for age in (0.0, 2.0, 6.0, 10.0, 15.0):
-        dp = C.simulate_makespan(C.dp_policy_fn(tables), lf, 240,
-                                 start_age=age, **kw).mean()
-        yd = C.simulate_makespan(C.young_daly_policy_fn(tau, GRID), lf, 240,
-                                 start_age=age, **kw).mean()
+        dp = sim(dp_tab, 240, start_age=age).mean()
+        yd = sim(yd_tab, 240, start_age=age).mean()
         emit(f"fig7a/overhead_age{age:g}h", 0.0,
              f"dp={100*(dp/4-1):.1f}%;young_daly={100*(yd/4-1):.1f}%")
 
     # Fig 7b: jobs from age 0, varying length
     for Th in (1, 2, 4, 6, 8):
         J = Th * 60
-        dp = C.simulate_makespan(C.dp_policy_fn(tables), lf, J, **kw).mean()
-        yd = C.simulate_makespan(C.young_daly_policy_fn(tau, GRID), lf, J,
-                                 **kw).mean()
-        none = C.simulate_makespan(C.no_checkpoint_policy_fn(), lf, J,
-                                   **kw).mean()
+        dp = sim(dp_tab, J).mean()
+        yd = sim(yd_tab, J).mean()
+        none = sim(nc_tab, J).mean()
         emit(f"fig7b/overhead_T{Th}h", 0.0,
              f"dp={100*(dp/Th-1):.1f}%;young_daly={100*(yd/Th-1):.1f}%;"
              f"none={100*(none/Th-1):.1f}%")

@@ -1,0 +1,146 @@
+"""Simulation-engine benchmark: Python reference loops vs the vectorized JAX
+Monte-Carlo engine (repro.core.engine).
+
+Covers the three hot paths the engine replaces:
+  * the Fig. 7 checkpointing executor (DP policy, 720-step job, >=5000
+    trials) - Python per-trial loop vs the batched lax.while_loop kernel on
+    a SHARED pre-drawn lifetime pool, so the comparison is pure execution;
+  * the Fig. 8 batch service - exact per-candidate reuse dispatches vs the
+    precomputed reuse-decision table, plus a (policy x seed) grid sweep;
+  * fleet-trace generation - grouped per-type batched sampling.
+
+Besides the usual CSV rows, writes a machine-readable ``BENCH_simulation.json``
+at the repo root so the perf trajectory can be diffed across PRs:
+
+    {"schema": 1, "mode": "full"|"quick",
+     "checkpointing_executor": {"workload": {...}, "python_reference_s": ...,
+                                "vectorized_s": ..., "speedup": ...,
+                                "mean_makespan_python": ...,
+                                "mean_makespan_vectorized": ...},
+     "batch_service": {"exact_reuse_s": ..., "table_reuse_s": ...,
+                       "grid_cells": ..., "grid_s": ..., "per_cell_s": ...,
+                       "cost_reduction_mean": ...},
+     "fleet_trace": {"n_vms": ..., "warm_s": ...}}
+
+``--quick`` (or run(quick=True)) shrinks the workload so the module finishes
+in seconds; the JSON records which mode produced it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import distributions as D
+from repro.core import engine as E
+from repro.core import service as SV
+from repro.core import simulator as SIM
+from repro.core.policies import checkpointing as C
+
+from .common import emit
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_simulation.json")
+
+
+def _bench_executor(quick: bool) -> dict:
+    dist = D.constrained_for("n1-highcpu-16")
+    job_steps = 240 if quick else 720
+    n_trials = 1000 if quick else 5000
+    tables = C.solve(dist, job_steps, grid_dt=1.0 / 60.0, delta_steps=1,
+                     n_sweeps=3)
+    lf = C.model_lifetimes_fn(dist)
+    first, pool = E.draw_lifetime_pool(lf, n_trials, seed=0)
+    table = E.dp_policy_table(tables)
+
+    t0 = time.perf_counter()
+    ref = C.simulate_makespan(C.dp_policy_fn(tables), lf, job_steps,
+                              pool=pool, first=first)
+    t_py = time.perf_counter() - t0
+
+    kw = dict(first=first, pool=pool, grid_dt=1.0 / 60.0, delta_steps=1)
+    E.simulate_makespan_batch(table, job_steps, **kw)      # compile warm-up
+    t_vec, vec = np.inf, None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        vec = E.simulate_makespan_batch(table, job_steps, **kw)
+        t_vec = min(t_vec, time.perf_counter() - t0)
+
+    speedup = t_py / t_vec
+    emit(f"sim_engine/fig7_dp_J{job_steps}_n{n_trials}", t_vec * 1e6,
+         f"python_s={t_py:.3f};speedup={speedup:.0f}x;"
+         f"mean_py={ref.mean():.4f}h;mean_vec={vec.mean():.4f}h")
+    return dict(
+        workload=dict(policy="dp", job_steps=job_steps, n_trials=n_trials,
+                      grid_dt=1.0 / 60.0, delta_steps=1, max_restarts=64,
+                      seed=0),
+        python_reference_s=t_py, vectorized_s=t_vec, speedup=speedup,
+        mean_makespan_python=float(ref.mean()),
+        mean_makespan_vectorized=float(vec.mean()))
+
+
+def _bench_service(quick: bool) -> dict:
+    dist = D.constrained_for("n1-highcpu-32")
+    n_jobs = 40 if quick else 100
+    seeds = range(2 if quick else 6)
+    kw = dict(n_jobs=n_jobs, job_hours=2.0, cluster_size=32)
+
+    # warm both variants first so neither timing absorbs one-time jit
+    # compiles (reuse_decision, the sampler's icdf) the other then reuses
+    SV.run_bag(dist, seed=0, vectorized_reuse=False, **kw)
+    SV.run_bag(dist, seed=0, **kw)
+    t0 = time.perf_counter()
+    SV.run_bag(dist, seed=0, vectorized_reuse=False, **kw)
+    t_exact = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    SV.run_bag(dist, seed=0, **kw)
+    t_table = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rows = SV.run_bag_grid(vm_types=("n1-highcpu-32",),
+                           policies=("model", "memoryless"),
+                           cluster_sizes=(32,), seeds=seeds, n_jobs=n_jobs,
+                           job_hours=2.0)
+    t_grid = time.perf_counter() - t0
+    red = float(np.mean([r["result"].cost_reduction for r in rows
+                         if r["policy"] == "model"]))
+    emit(f"sim_engine/service_bag_n{n_jobs}", t_table * 1e6,
+         f"exact_s={t_exact:.3f};table_s={t_table:.3f};"
+         f"grid{len(rows)}cells_s={t_grid:.3f};reduction={red:.2f}x")
+    return dict(exact_reuse_s=t_exact, table_reuse_s=t_table,
+                grid_cells=len(rows), grid_s=t_grid,
+                per_cell_s=t_grid / len(rows), cost_reduction_mean=red)
+
+
+def _bench_fleet(quick: bool) -> dict:
+    n_vms = 300 if quick else 1516
+    SIM.generate_fleet_trace(jax.random.PRNGKey(0), n_vms=n_vms)  # warm-up
+    t0 = time.perf_counter()
+    SIM.generate_fleet_trace(jax.random.PRNGKey(1), n_vms=n_vms)
+    t_warm = time.perf_counter() - t0
+    emit(f"sim_engine/fleet_trace_{n_vms}", t_warm * 1e6, "grouped_by_type")
+    return dict(n_vms=n_vms, warm_s=t_warm)
+
+
+def run(quick: bool = False):
+    payload = {
+        "schema": 1,
+        "mode": "quick" if quick else "full",
+        "generated_unix": time.time(),
+        "checkpointing_executor": _bench_executor(quick),
+        "batch_service": _bench_service(quick),
+        "fleet_trace": _bench_fleet(quick),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    emit("sim_engine/json", 0.0, os.path.relpath(BENCH_JSON, _ROOT))
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

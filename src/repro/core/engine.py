@@ -1,0 +1,269 @@
+"""Vectorized JAX Monte-Carlo engine for policy evaluation.
+
+This module is the batched/jitted counterpart of the pure-Python simulation
+hot paths used by the paper's headline figures:
+
+  * :func:`simulate_makespan_batch` — the Fig. 7 checkpointing executor
+    (``repro.core.policies.checkpointing.simulate_makespan``) rewritten as a
+    single ``lax.while_loop`` over *events*, operating on ``(n_trials,)``
+    state vectors with the policy table and the pre-drawn lifetime pool
+    resident on device.  One event = one work segment attempt (success or
+    preemption) for every still-running trial; the loop exits as soon as all
+    trials have finished, so the wall-clock cost is the *slowest* trial's
+    event count, not ``n_trials`` Python iterations.
+  * :func:`reuse_decision_table` — the scheduling policy's Eq. 9-vs-Eq. 10
+    reuse decision evaluated for a whole ``(remaining-work x VM-age)`` grid
+    in one jitted call, so the batch-service event loop never dispatches to
+    JAX per idle-VM candidate.
+  * :func:`draw_lifetime_pool` — the shared pre-drawn lifetime pool.  The
+    Python reference executor and the vectorized kernel both consume pools
+    drawn by this helper, which is what makes exact (same-seed, same-pool)
+    equivalence testable.
+
+Policies are represented as integer *tables* ``P[j, t] -> interval`` (steps
+until the next checkpoint given ``j`` remaining steps and VM age index
+``t``); :func:`dp_policy_table`, :func:`young_daly_policy_table` and
+:func:`no_checkpoint_policy_table` build them for the three Fig. 7 policies.
+Age-independent policies use a ``(j_max+1, 1)`` table — the kernel clips the
+age index into the table's second dimension.
+
+Exactness contract: with a float64 pool and x64 enabled (e.g. under
+``jax.experimental.enable_x64``), the kernel performs the *same* IEEE
+operations in the same order as the Python reference, so makespans match
+bit-for-bit.  In default float32 mode results agree to ~1e-6 relative, which
+is far below Monte-Carlo noise.
+
+Typical use (Fig. 7 workload)::
+
+    tables = checkpointing.solve(dist, 720)
+    table = engine.dp_policy_table(tables)
+    first, pool = engine.draw_lifetime_pool(
+        checkpointing.model_lifetimes_fn(dist), n_trials=5000,
+        max_restarts=64, seed=0)
+    makespans = engine.simulate_makespan_batch(table, 720, first=first,
+                                               pool=pool)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import distributions as dists
+from .policies import scheduling as sched_policy
+
+__all__ = [
+    "dp_policy_table", "young_daly_policy_table", "no_checkpoint_policy_table",
+    "draw_lifetime_pool", "simulate_makespan_batch", "simulate_makespan_engine",
+    "ReuseTable",
+]
+
+
+# ---------------------------------------------------------------------------
+# policy tables
+# ---------------------------------------------------------------------------
+
+def dp_policy_table(tables) -> np.ndarray:
+    """The DP's optimal-interval table ``K[j, t]`` (see checkpointing.solve)."""
+    return np.asarray(tables.K, np.int32)
+
+
+def young_daly_policy_table(tau_steps: int, job_steps: int) -> np.ndarray:
+    """Fixed-interval policy ``min(tau, remaining)`` as a (j_max+1, 1) table."""
+    j = np.arange(job_steps + 1, dtype=np.int32)
+    return np.minimum(np.maximum(int(tau_steps), 1), j)[:, None].astype(np.int32)
+
+
+def no_checkpoint_policy_table(job_steps: int) -> np.ndarray:
+    """Run-to-completion: the next 'segment' is the whole remaining job."""
+    return np.arange(job_steps + 1, dtype=np.int32)[:, None]
+
+
+# ---------------------------------------------------------------------------
+# lifetime pools
+# ---------------------------------------------------------------------------
+
+def draw_lifetime_pool(lifetimes_fn: Callable, n_trials: int, *,
+                       max_restarts: int = 64, seed: int = 0,
+                       start_age: float = 0.0):
+    """Pre-draw the `(first, pool)` lifetimes consumed by one executor run.
+
+    ``pool`` has shape ``(n_trials, max_restarts + 2)``; draw ``k`` (k >= 1)
+    after the k-th preemption of trial ``n`` is ``pool[n, min(k, max_restarts
+    + 1)]``.  ``first`` is the initial VM's lifetime, conditioned on survival
+    to ``start_age`` when the sampler supports ``min_age`` (falls back to
+    ``pool[:, 0]`` otherwise).  Draw order matches the historical reference
+    executor, so a given ``seed`` yields the same lifetimes in both engines.
+    """
+    rng = np.random.default_rng(seed)
+    pool = np.asarray(lifetimes_fn(rng, n_trials * (max_restarts + 2)),
+                      np.float64).reshape(n_trials, max_restarts + 2)
+    try:
+        first = np.asarray(lifetimes_fn(rng, n_trials, min_age=start_age),
+                           np.float64)
+    except TypeError:  # sampler without conditioning support
+        first = pool[:, 0].copy()
+    return first, pool
+
+
+# ---------------------------------------------------------------------------
+# the event kernel
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
+                     delta_steps, max_restarts, max_events):
+    """One ``lax.while_loop`` over events; all state is (n_trials,) vectors.
+
+    Works entirely in grid-step units: lifetimes arrive pre-converted to
+    steps (initial sub-grid age offset already removed), VM age is an integer
+    grid index, and the only float accumulation is the sum of preempted
+    partial segments.  The loop body therefore contains no multiply-add
+    pattern XLA could contract into an FMA — given a shared pool, a float64
+    run matches the Python reference loop bit-for-bit.  Returns
+    ``(done_steps, lost_steps, restarts)``; the caller converts to hours.
+    """
+    n = first_steps.shape[0]
+    fdt = first_steps.dtype
+    j_hi = policy.shape[0] - 1
+    t_hi = policy.shape[1] - 1
+
+    state = dict(
+        remaining=jnp.full((n,), job_steps, jnp.int32),
+        age_idx=jnp.full((n,), age0_idx, jnp.int32),
+        draw=jnp.zeros((n,), jnp.int32),
+        life_s=first_steps,
+        done_steps=jnp.zeros((n,), jnp.int32),
+        lost_steps=jnp.zeros((n,), fdt),
+        restarts=jnp.zeros((n,), jnp.int32),
+        events=jnp.zeros((), jnp.int32),
+    )
+
+    def active(s):
+        return (s["remaining"] > 0) & (s["restarts"] <= max_restarts)
+
+    def cond(s):
+        return jnp.any(active(s)) & (s["events"] < max_events)
+
+    def body(s):
+        act = active(s)
+        rem, age = s["remaining"], s["age_idx"]
+        i = policy[jnp.clip(rem, 0, j_hi), jnp.clip(age, 0, t_hi)]
+        i = jnp.clip(i, 1, jnp.maximum(rem, 1))
+        w = jnp.where(i < rem, i + delta_steps, i)
+        survive = (age + w).astype(fdt) <= s["life_s"]
+        # preemption: time since VM start minus checkpointed prefix is lost
+        loss = jnp.maximum(s["life_s"] - age.astype(fdt), 0.0)
+        nxt_draw = s["draw"] + 1
+        nxt_life = pool_steps[jnp.arange(n),
+                              jnp.minimum(nxt_draw, max_restarts + 1)]
+
+        def upd(old, succ_val, fail_val):
+            return jnp.where(act, jnp.where(survive, succ_val, fail_val), old)
+
+        return dict(
+            remaining=upd(rem, rem - i, rem),
+            age_idx=upd(age, age + w, jnp.zeros((), jnp.int32)),
+            draw=upd(s["draw"], s["draw"], nxt_draw),
+            life_s=upd(s["life_s"], s["life_s"], nxt_life),
+            done_steps=upd(s["done_steps"], s["done_steps"] + w,
+                           s["done_steps"]),
+            lost_steps=upd(s["lost_steps"], s["lost_steps"],
+                           s["lost_steps"] + loss),
+            restarts=upd(s["restarts"], s["restarts"], s["restarts"] + 1),
+            events=s["events"] + 1,
+        )
+
+    out = jax.lax.while_loop(cond, body, state)
+    return out["done_steps"], out["lost_steps"], out["restarts"]
+
+
+def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
+                            grid_dt: float = 1.0 / 60.0, delta_steps: int = 1,
+                            start_age: float = 0.0,
+                            restart_overhead: float = 0.0,
+                            max_restarts: int = 64,
+                            max_events: int | None = None) -> np.ndarray:
+    """Vectorized executor over a shared pre-drawn lifetime pool.
+
+    Semantics are identical to the Python reference
+    ``checkpointing.simulate_makespan``: a preemption mid-segment (work or
+    checkpoint write) loses progress back to the last durable checkpoint and
+    the job resumes on a fresh VM after ``restart_overhead`` hours.  Returns
+    makespans (hours), shape ``(n_trials,)``.
+    """
+    dtype = jnp.result_type(float)  # float64 under enable_x64, else float32
+    if max_events is None:
+        max_events = int(job_steps) + int(max_restarts) + 2
+    age0_idx = int(round(start_age / grid_dt))
+    off0 = start_age - age0_idx * grid_dt
+    # unit conversion in float64 numpy, identical to the reference loop
+    first_steps = (np.asarray(first, np.float64) - off0) / grid_dt
+    pool_steps = np.asarray(pool, np.float64) / grid_dt
+    done, lost, restarts = _makespan_kernel(
+        jnp.asarray(policy_table, jnp.int32),
+        jnp.asarray(first_steps, dtype), jnp.asarray(pool_steps, dtype),
+        jnp.int32(job_steps), jnp.int32(age0_idx), jnp.int32(delta_steps),
+        jnp.int32(max_restarts), jnp.int32(max_events))
+    done = np.asarray(done, np.float64)
+    lost = np.asarray(lost, np.float64)
+    restarts = np.asarray(restarts, np.float64)
+    return (done + lost) * grid_dt + restarts * restart_overhead
+
+
+def simulate_makespan_engine(policy_table, lifetimes_fn, job_steps: int, *,
+                             grid_dt: float = 1.0 / 60.0, delta_steps: int = 1,
+                             start_age: float = 0.0, n_trials: int = 2000,
+                             seed: int = 0, restart_overhead: float = 0.0,
+                             max_restarts: int = 64) -> np.ndarray:
+    """Drop-in vectorized replacement for ``checkpointing.simulate_makespan``
+    (same sampler protocol, same seed -> same lifetime draws)."""
+    first, pool = draw_lifetime_pool(lifetimes_fn, n_trials,
+                                     max_restarts=max_restarts, seed=seed,
+                                     start_age=start_age)
+    return simulate_makespan_batch(policy_table, job_steps, first=first,
+                                   pool=pool, grid_dt=grid_dt,
+                                   delta_steps=delta_steps,
+                                   start_age=start_age,
+                                   restart_overhead=restart_overhead,
+                                   max_restarts=max_restarts)
+
+
+# ---------------------------------------------------------------------------
+# batched reuse decisions for the service simulator
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_age",))
+def _reuse_grid(dist, T_values, L, n_age):
+    age = jnp.linspace(0.0, L, n_age)
+    return sched_policy.reuse_decision(dist, T_values[:, None], age[None, :])
+
+
+class ReuseTable:
+    """Precomputed reuse decisions over (remaining work x VM age).
+
+    One jitted call evaluates Eq. 10 < Eq. 9 for every grid point; lookups
+    from the service's event loop are then pure numpy indexing.  ``T_values``
+    is exact in the remaining-work axis (pass the actual job lengths when
+    they are known, e.g. a non-checkpointing bag); ages are quantized to
+    ``n_age`` points over [0, L] (nearest), 1-min resolution by default.
+    """
+
+    def __init__(self, dist, T_values, *, n_age: int = 1441):
+        self.T_values = np.asarray(np.sort(np.unique(T_values)), np.float64)
+        self.L = float(dist.L)
+        self.n_age = int(n_age)
+        self.table = np.asarray(_reuse_grid(
+            dist, jnp.asarray(self.T_values), self.L, self.n_age))
+
+    def decide(self, remaining_work: float, vm_age: float) -> bool:
+        ti = int(np.searchsorted(self.T_values, remaining_work))
+        if ti >= len(self.T_values) or (
+                ti > 0 and remaining_work - self.T_values[ti - 1]
+                < self.T_values[ti] - remaining_work):
+            ti -= 1
+        ai = int(round(vm_age / self.L * (self.n_age - 1)))
+        return bool(self.table[ti, min(max(ai, 0), self.n_age - 1)])

@@ -156,6 +156,14 @@ def extract_schedule(tables: DPTables, job_steps: int,
 
 # ---------------------------------------------------------------------------
 # Monte-Carlo executor (Fig. 7 evaluation; also used by tests)
+#
+# This per-trial Python loop is the REFERENCE implementation; the production
+# path is the batched lax.while_loop kernel in repro.core.engine, which
+# performs the same operations on (n_trials,)-vectors.  Exactness contract:
+# lifetimes are pre-converted to grid-step units (minus the initial VM's
+# sub-grid age offset) OUTSIDE the hot loop, so the loop body contains no
+# multiply-add pattern XLA could contract into an FMA; given a shared pool,
+# the kernel run in float64 matches this loop bit-for-bit.
 # ---------------------------------------------------------------------------
 
 def simulate_makespan(policy_fn: Callable[[int, int], int], lifetimes_fn,
@@ -163,13 +171,16 @@ def simulate_makespan(policy_fn: Callable[[int, int], int], lifetimes_fn,
                       delta_steps: int = 1, start_age: float = 0.0,
                       n_trials: int = 2000, seed: int = 0,
                       restart_overhead: float = 0.0,
-                      max_restarts: int = 64):
+                      max_restarts: int = 64, pool=None, first=None):
     """Execute a job under sampled preemptions.
 
     policy_fn(remaining_steps, age_idx) -> steps until next checkpoint.
     lifetimes_fn(rng, n, min_age=0.0) -> n sampled VM lifetimes (hours),
     conditioned on survival to ``min_age`` (used for the first VM when the
-    job starts on an aged machine).
+    job starts on an aged machine).  Alternatively pass pre-drawn ``first``
+    (n_trials,) and ``pool`` (n_trials, max_restarts+2) arrays from
+    ``engine.draw_lifetime_pool`` — the equivalence tests share one pool
+    between this reference and the vectorized kernel.
 
     Semantics: failure during a work segment or during the checkpoint write
     loses progress back to the last durable checkpoint; the job resumes on a
@@ -177,42 +188,48 @@ def simulate_makespan(policy_fn: Callable[[int, int], int], lifetimes_fn,
     schedule (the paper's resume-event behavior).  Returns makespans (hours),
     shape (n_trials,).
     """
-    rng = np.random.default_rng(seed)
-    # pre-draw the lifetime pool in one batched call (the per-event sampling
-    # path costs a full JAX dispatch per draw)
-    pool = np.asarray(lifetimes_fn(rng, n_trials * (max_restarts + 2)),
-                      np.float64).reshape(n_trials, max_restarts + 2)
-    # the job starts on a VM already alive at start_age: condition draw 0
-    try:
-        first = np.asarray(lifetimes_fn(rng, n_trials, min_age=start_age),
-                           np.float64)
-    except TypeError:  # sampler without conditioning support
-        first = pool[:, 0]
+    if pool is None:
+        from .. import engine  # local import: engine imports this module too
+
+        first, pool = engine.draw_lifetime_pool(
+            lifetimes_fn, n_trials, max_restarts=max_restarts, seed=seed,
+            start_age=start_age)
+    else:
+        first = pool[:, 0] if first is None else first
+        n_trials = len(first)
+    age0_idx = int(round(start_age / grid_dt))
+    off0 = start_age - age0_idx * grid_dt
+    # lifetimes in grid-step units, initial VM age offset removed (see the
+    # exactness note above: all comparisons are int-vs-precomputed-float)
+    first_steps = (np.asarray(first, np.float64) - off0) / grid_dt
+    pool_steps = np.asarray(pool, np.float64) / grid_dt
     out = np.empty((n_trials,), np.float64)
     for n in range(n_trials):
         remaining = int(job_steps)
-        age = float(start_age)
+        age_idx = age0_idx
         draw = 0
-        life = first[n]
-        elapsed = 0.0
+        life_s = first_steps[n]
+        done_steps = 0          # completed work+checkpoint segments (grid units)
+        lost_steps = 0.0        # preempted partial segments (grid units)
         restarts = 0
         while remaining > 0 and restarts <= max_restarts:
-            i = int(policy_fn(remaining, int(round(age / grid_dt))))
+            i = int(policy_fn(remaining, age_idx))
             i = max(1, min(i, remaining))
-            seg = i * grid_dt + (delta_steps * grid_dt if i < remaining else 0.0)
-            if age + seg <= life:
+            w = i + (delta_steps if i < remaining else 0)
+            if age_idx + w <= life_s:
                 # segment + checkpoint complete
-                elapsed += seg
-                age += seg
+                done_steps += w
+                age_idx += w
                 remaining -= i
             else:
                 # preempted mid-segment: progress since last checkpoint lost
-                elapsed += max(life - age, 0.0) + restart_overhead
+                lost_steps += max(life_s - age_idx, 0.0)
                 draw += 1
-                life = pool[n, min(draw, max_restarts + 1)]
-                age = 0.0
+                life_s = pool_steps[n, min(draw, max_restarts + 1)]
+                age_idx = 0
                 restarts += 1
-        out[n] = elapsed
+        out[n] = (done_steps + lost_steps) * grid_dt \
+            + restarts * restart_overhead
     return out
 
 

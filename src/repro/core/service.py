@@ -8,16 +8,26 @@ onto them using the model-driven policies, keeps stable VMs as hot spares
 This is also the harness the training framework's pod-level fault-injection
 tests reuse (a "job" = a training segment between checkpoints; a "VM" = a
 preemptible TPU pod reservation).
+
+The event loop itself is numpy-only; all JAX work is batched up front via
+``repro.core.engine``: lifetime sampling goes through a pooled inverse-CDF
+draw (one dispatch per ~4096 lifetimes) and the model policy's per-candidate
+reuse decisions are looked up in a precomputed :class:`engine.ReuseTable`
+(one jitted grid evaluation per distribution, shareable across runs).
+``run_bag_grid`` sweeps (policy x vm_type x cluster_size x seed) in one
+call, amortizing that vectorized setup across the whole grid.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import itertools
 from typing import Optional
 
 import numpy as np
 
 from . import distributions as dists
+from . import engine
 from .policies import scheduling as sched_policy
 
 # Google Cloud n1-highcpu pricing (2019, us-central1, USD/hour) - the ~4.9x
@@ -40,6 +50,7 @@ class Job:
     length: float               # uninterrupted running time (hours)
     submitted: float = 0.0
     started: Optional[float] = None
+    attempt_started: Optional[float] = None
     finished: Optional[float] = None
     attempts: int = 0
     failures: int = 0
@@ -90,7 +101,9 @@ class BatchService:
                  cluster_size: int = 32, policy: str = "model",
                  lifetimes_fn=None, seed: int = 0,
                  checkpointing: bool = False, ckpt_interval: float = 0.5,
-                 ckpt_cost: float = 1.0 / 60.0):
+                 ckpt_cost: float = 1.0 / 60.0,
+                 reuse_table: Optional[engine.ReuseTable] = None,
+                 vectorized_reuse: bool = True):
         self.dist = dist
         self.vm_type = vm_type
         self.cluster_size = cluster_size
@@ -100,6 +113,25 @@ class BatchService:
         self.checkpointing = checkpointing
         self.ckpt_interval = ckpt_interval
         self.ckpt_cost = ckpt_cost
+        # vectorized reuse decisions: one jitted grid evaluation up front
+        # (shareable across runs/seeds via ``reuse_table``) instead of one
+        # JAX dispatch per idle-VM candidate inside the event loop
+        self.reuse_table = reuse_table
+        self.vectorized_reuse = vectorized_reuse
+        self._run_reuse_table: Optional[engine.ReuseTable] = None
+
+    def _candidate_rem_values(self, lengths):
+        """Every remaining-work value a job can present to the reuse policy:
+        its full length, minus whole checkpoint intervals when checkpointing
+        is on (progress is only banked at checkpoint boundaries)."""
+        vals = list(map(float, lengths))
+        if self.checkpointing:
+            for l in map(float, lengths):
+                k = 1
+                while l - k * self.ckpt_interval > 0:
+                    vals.append(l - k * self.ckpt_interval)
+                    k += 1
+        return np.asarray(vals)
 
     _pool: Optional[np.ndarray] = None
     _pool_pos: int = 0
@@ -123,10 +155,24 @@ class BatchService:
         if self.policy == "memoryless":
             return True
         rem = job.length - job.done_work
+        if self._run_reuse_table is not None:
+            return self._run_reuse_table.decide(rem, vm.age(now))
         return bool(sched_policy.reuse_decision(self.dist, rem, vm.age(now)))
 
     # -- simulation ---------------------------------------------------------
     def run(self, job_lengths) -> ServiceResult:
+        # per-run table: a user-supplied reuse_table is trusted to cover the
+        # bag; otherwise build one from THIS bag's lengths (a table cached
+        # from a previous run could miss the new remaining-work values)
+        if self.policy != "model":
+            self._run_reuse_table = None
+        elif self.reuse_table is not None:
+            self._run_reuse_table = self.reuse_table
+        elif self.vectorized_reuse:
+            self._run_reuse_table = engine.ReuseTable(
+                self.dist, self._candidate_rem_values(job_lengths))
+        else:
+            self._run_reuse_table = None
         jobs = [Job(i, float(l)) for i, l in enumerate(job_lengths)]
         queue = list(range(len(jobs)))
         vms: dict[int, VM] = {}
@@ -162,9 +208,13 @@ class BatchService:
             vm.job = job.job_id
             vm.idle_since = None
             job.attempts += 1
+            job.attempt_started = t
             if job.started is None:
                 job.started = t
-            finish_at = t + RELAUNCH_OVERHEAD * 0.0 + segment_time(job)
+            # no relaunch overhead here: fresh VMs are launched (and billed)
+            # RELAUNCH_OVERHEAD later in assign(); reused hot spares are
+            # already provisioned
+            finish_at = t + segment_time(job)
             heapq.heappush(events, (finish_at, seq, "finish", vm.vm_id))
             seq += 1
 
@@ -230,7 +280,9 @@ class BatchService:
                         n_fail += 1
                         if self.checkpointing:
                             # progress up to the last completed checkpoint
-                            ran = max(now - (job.started or now), 0.0)
+                            # of THIS attempt (earlier attempts only count
+                            # through the done_work they already banked)
+                            ran = max(now - (job.attempt_started or now), 0.0)
                             k = int(ran / (self.ckpt_interval + self.ckpt_cost))
                             job.done_work = min(job.done_work
                                                 + k * self.ckpt_interval,
@@ -244,6 +296,11 @@ class BatchService:
                         now - vm.idle_since >= HOT_SPARE_HOURS - 1e-9:
                     vm.terminated = now
                     vm_hours += now - vm.launched
+                    # the expired spare freed cluster capacity: jobs whose
+                    # reuse was denied while the cluster was full can now
+                    # get a fresh VM (otherwise they starve once the event
+                    # queue drains)
+                    assign(now)
             if all(j.finished is not None for j in jobs):
                 break
 
@@ -264,13 +321,54 @@ class BatchService:
                              jobs=jobs)
 
 
+def _bag_lengths(n_jobs: int, job_hours: float, jitter: float, seed: int):
+    rng = np.random.default_rng(seed + 1)
+    return job_hours * (1.0 + jitter * (rng.uniform(size=n_jobs) - 0.5))
+
+
 def run_bag(dist, *, n_jobs: int = 100, job_hours: float = 2.0,
             jitter: float = 0.1, cluster_size: int = 32,
             vm_type: str = "n1-highcpu-32", policy: str = "model",
             seed: int = 0, lifetimes_fn=None, **kw) -> ServiceResult:
     """Paper Fig. 8 setup: a bag of ~uniform-length jobs on a 32-VM cluster."""
-    rng = np.random.default_rng(seed + 1)
-    lengths = job_hours * (1.0 + jitter * (rng.uniform(size=n_jobs) - 0.5))
+    lengths = _bag_lengths(n_jobs, job_hours, jitter, seed)
     svc = BatchService(dist, vm_type=vm_type, cluster_size=cluster_size,
                        policy=policy, seed=seed, lifetimes_fn=lifetimes_fn, **kw)
     return svc.run(lengths)
+
+
+def run_bag_grid(*, vm_types=("n1-highcpu-32",), policies=("model",),
+                 cluster_sizes=(32,), seeds=(0,), n_jobs: int = 100,
+                 job_hours: float = 2.0, jitter: float = 0.1, dist_for=None,
+                 **kw) -> list:
+    """Sweep ``run_bag`` over the (policy x vm_type x cluster_size x seed)
+    grid in one call, sharing the vectorized per-distribution work.
+
+    The model policy's reuse decisions for ALL bags of a VM type are
+    evaluated in a single jitted grid call (one :class:`engine.ReuseTable`
+    over the union of every seed's job lengths), so the per-cell event loops
+    run entirely in numpy.  Returns a list of dict rows with the grid
+    coordinates and the :class:`ServiceResult`.
+    """
+    dist_for = dist_for or dists.constrained_for
+    policies, cluster_sizes = tuple(policies), tuple(cluster_sizes)
+    seeds = tuple(seeds)
+    lengths = {s: _bag_lengths(n_jobs, job_hours, jitter, s) for s in seeds}
+    rows = []
+    for vm_type in vm_types:
+        dist = dist_for(vm_type)
+        table = None
+        if "model" in policies and kw.get("vectorized_reuse", True):
+            probe = BatchService(dist, vm_type=vm_type, **kw)
+            all_rem = probe._candidate_rem_values(
+                np.concatenate(list(lengths.values())))
+            table = engine.ReuseTable(dist, all_rem)
+        for policy, cs, seed in itertools.product(policies, cluster_sizes,
+                                                  seeds):
+            svc = BatchService(
+                dist, vm_type=vm_type, cluster_size=cs, policy=policy,
+                seed=seed, reuse_table=table if policy == "model" else None,
+                **kw)
+            rows.append(dict(vm_type=vm_type, policy=policy, cluster_size=cs,
+                             seed=seed, result=svc.run(lengths[seed])))
+    return rows

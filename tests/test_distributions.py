@@ -1,9 +1,12 @@
 """Property and invariant tests for the preemption probability models."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis installed")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import distributions as D

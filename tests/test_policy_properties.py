@@ -1,9 +1,12 @@
 """Property-based tests (hypothesis) on the DP checkpointing policy and the
 scheduling quantities - system invariants that must hold for ANY plausible
 model parameters, not just the calibrated ones."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis installed")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import distributions as D
