@@ -1,12 +1,27 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission, timing + BENCH-JSON output."""
 from __future__ import annotations
 
+import json
+import os
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def emit(name: str, us_per_call: float, derived: str):
     """The harness contract: ``name,us_per_call,derived`` CSV rows."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def write_bench_json(filename: str, payload: dict, *, emit_as: str):
+    """Write a machine-readable ``BENCH_*.json`` artifact at the repo root
+    (the cross-PR perf-trajectory contract) and emit its CSV row."""
+    path = os.path.join(REPO_ROOT, filename)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    emit(emit_as, 0.0, os.path.relpath(path, REPO_ROOT))
+    return path
 
 
 def timed(fn, *args, reps: int = 1, **kw):

@@ -9,9 +9,10 @@ Usage::
 
     python -m benchmarks.run [--quick] [--only MODULE[,MODULE...]]
 
-``--quick`` shrinks the workloads of modules that support it (currently the
-simulation-engine benchmark) so a full-harness smoke run finishes in seconds
-and still refreshes ``BENCH_simulation.json`` at the repo root.
+``--quick`` shrinks the workloads of modules that support it (the
+simulation-engine and scenario-sweep benchmarks) so a full-harness smoke run
+finishes in seconds and still refreshes ``BENCH_simulation.json`` /
+``BENCH_scenarios.json`` at the repo root.
 """
 from __future__ import annotations
 
@@ -22,7 +23,7 @@ import traceback
 
 from . import (e2e_train, fig1_fit, fig5_wasted_work, fig6_scheduling,
                fig7_checkpointing, fig8_service, kernels_bench,
-               sim_engine_bench, tonks_lemma)
+               scenario_sweep, sim_engine_bench, tonks_lemma)
 
 MODULES = [
     ("fig1_fit", fig1_fit),
@@ -31,6 +32,7 @@ MODULES = [
     ("fig7_checkpointing", fig7_checkpointing),
     ("fig8_service", fig8_service),
     ("sim_engine_bench", sim_engine_bench),
+    ("scenario_sweep", scenario_sweep),
     ("tonks_lemma", tonks_lemma),
     ("kernels_bench", kernels_bench),
     ("e2e_train", e2e_train),

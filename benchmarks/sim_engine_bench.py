@@ -27,8 +27,6 @@ in seconds; the JSON records which mode produced it.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax
@@ -40,10 +38,7 @@ from repro.core import service as SV
 from repro.core import simulator as SIM
 from repro.core.policies import checkpointing as C
 
-from .common import emit
-
-_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BENCH_JSON = os.path.join(_ROOT, "BENCH_simulation.json")
+from .common import emit, write_bench_json
 
 
 def _bench_executor(quick: bool) -> dict:
@@ -134,10 +129,8 @@ def run(quick: bool = False):
         "batch_service": _bench_service(quick),
         "fleet_trace": _bench_fleet(quick),
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    emit("sim_engine/json", 0.0, os.path.relpath(BENCH_JSON, _ROOT))
+    write_bench_json("BENCH_simulation.json", payload,
+                     emit_as="sim_engine/json")
 
 
 if __name__ == "__main__":

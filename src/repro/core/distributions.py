@@ -196,6 +196,87 @@ class Constrained(_DistBase):
 
 
 @_dist
+class DiurnalConstrained(_DistBase):
+    """Obs. 5 launch-phase-modulated constrained model.
+
+    The paper observes that VMs launched during busy (daytime) hours see a
+    harsher initial-preemption phase than night launches.  This family
+    composes Eq. 1 with a smooth day/night modulation of ``A`` and ``tau1``
+    keyed on the wall-clock hour-of-day at VM *launch*:
+
+        m(c)        = cos(2*pi*(c - peak_clock) / 24)        in [-1, 1]
+        A_eff       = A    * (1 + amp_A    * m(launch_clock))
+        tau1_eff    = tau1 * (1 - amp_tau1 * m(launch_clock))
+
+    so a launch at ``peak_clock`` preempts more (larger A, faster initial
+    decay) and a launch 12 h away preempts less.  ``tau2``/``b`` (the
+    provider's deadline wall) are clock-independent — the 24 h reclamation
+    does not care when the VM was launched.
+
+    The effective parameters are fixed at launch, so every method delegates
+    to a plain :class:`Constrained` — the full
+    ``cdf/pdf/hazard/partial_expectation/icdf`` closed-form contract (and
+    with it the DP solver, ``engine.ReuseTable`` and
+    ``engine.draw_lifetime_pool``) is inherited unchanged, and the class
+    stays a jit/vmap-compatible pytree over all of its fields (vmap over
+    ``launch_clock`` evaluates a whole diurnal profile in one call).
+    """
+
+    tau1: jnp.ndarray = 1.0
+    tau2: jnp.ndarray = 0.8
+    b: jnp.ndarray = 24.0
+    A: jnp.ndarray = 0.475
+    launch_clock: jnp.ndarray = 12.0   # wall-clock hour-of-day at VM launch
+    amp_A: jnp.ndarray = 0.15          # day/night depth of the A modulation
+    amp_tau1: jnp.ndarray = 0.35       # day/night depth of the tau1 modulation
+    peak_clock: jnp.ndarray = 20.0     # busiest launch hour (simulator phase)
+    L: jnp.ndarray = DEADLINE_HOURS
+
+    def modulation(self):
+        """m(launch_clock) in [-1, 1]; +1 at the busiest launch hour."""
+        return jnp.cos(2.0 * jnp.pi
+                       * (_f32(self.launch_clock) - self.peak_clock) / 24.0)
+
+    def effective(self) -> "Constrained":
+        """The launch-phase-resolved Eq. 1 model.
+
+        The boosted day-phase ``A`` is capped so the *raw* Eq. 1 CDF stays
+        proper (<= 1) up to the deadline — otherwise the clipped CDF would
+        saturate before L while the closed-form pdf stayed positive,
+        breaking the pdf == d(cdf)/dt contract the DP solver relies on.
+        With the shipped fits (b ~ L, so F(L) ~ 2A) that cap sits near 0.5,
+        which most day-phase boosts saturate — the cap never pushes ``A``
+        *below* the static fit, so day >= static >= night always holds, but
+        for large-A types the day-phase severity comes mostly from ``tau1``.
+        """
+        m = self.modulation()
+        tau1 = jnp.maximum(self.tau1 * (1.0 - self.amp_tau1 * m), 0.05)
+        cap = (1.0 - 1e-3) / (1.0 - _exp(-self.L / tau1)
+                              + _exp((self.L - self.b) / self.tau2))
+        A = jnp.clip(self.A * (1.0 + self.amp_A * m), 1e-3,
+                     jnp.maximum(cap, self.A))
+        return Constrained(tau1=tau1, tau2=self.tau2, b=self.b, A=A, L=self.L)
+
+    def cdf(self, t):
+        return self.effective().cdf(t)
+
+    def cdf_raw(self, t):
+        return self.effective().cdf_raw(t)
+
+    def pdf(self, t):
+        return self.effective().pdf(t)
+
+    def hazard(self, t):
+        return self.effective().hazard(t)
+
+    def partial_expectation(self, a, b):
+        return self.effective().partial_expectation(a, b)
+
+    def phases(self):
+        return self.effective().phases()
+
+
+@_dist
 class Exponential(_DistBase):
     """Memoryless baseline: F(t) = 1 - e^{-t/mttf} (classical spot-instance model)."""
 
@@ -334,10 +415,20 @@ def constrained_for(vm_type: str = "n1-highcpu-16") -> Constrained:
     return Constrained(**VM_TYPE_PARAMS[vm_type])
 
 
+def diurnal_for(vm_type: str = "n1-highcpu-16",
+                launch_clock: float = 12.0, **kw) -> DiurnalConstrained:
+    """Obs. 5 variant of :func:`constrained_for`: the type's paper-calibrated
+    Eq. 1 fit, modulated by the wall-clock launch hour.  ``kw`` overrides
+    any field, including the type's base Eq. 1 parameters."""
+    return DiurnalConstrained(**{**VM_TYPE_PARAMS[vm_type],
+                                 "launch_clock": launch_clock, **kw})
+
+
 def registry():
     """Family name -> class, used by fitting/benchmarks."""
     return {
         "constrained": Constrained,
+        "diurnal_constrained": DiurnalConstrained,
         "exponential": Exponential,
         "weibull": Weibull,
         "gompertz_makeham": GompertzMakeham,

@@ -124,7 +124,8 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
     partial segments.  The loop body therefore contains no multiply-add
     pattern XLA could contract into an FMA — given a shared pool, a float64
     run matches the Python reference loop bit-for-bit.  Returns
-    ``(done_steps, lost_steps, restarts)``; the caller converts to hours.
+    ``(done_steps, lost_steps, restarts, finished)`` — ``finished`` marks
+    trials that completed all their work; the caller converts to hours.
     """
     n = first_steps.shape[0]
     fdt = first_steps.dtype
@@ -178,7 +179,8 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
         )
 
     out = jax.lax.while_loop(cond, body, state)
-    return out["done_steps"], out["lost_steps"], out["restarts"]
+    return (out["done_steps"], out["lost_steps"], out["restarts"],
+            out["remaining"] == 0)
 
 
 def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
@@ -186,7 +188,9 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
                             start_age: float = 0.0,
                             restart_overhead: float = 0.0,
                             max_restarts: int = 64,
-                            max_events: int | None = None) -> np.ndarray:
+                            max_events: int | None = None,
+                            unfinished: str = "nan",
+                            return_finished: bool = False):
     """Vectorized executor over a shared pre-drawn lifetime pool.
 
     Semantics are identical to the Python reference
@@ -194,7 +198,23 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     checkpoint write) loses progress back to the last durable checkpoint and
     the job resumes on a fresh VM after ``restart_overhead`` hours.  Returns
     makespans (hours), shape ``(n_trials,)``.
+
+    Trials can exit the event loop *unfinished* — either their ``max_restarts``
+    budget is exhausted or the whole batch hits the ``max_events`` safety cap.
+    ``unfinished`` selects how those trials are reported:
+
+    * ``"nan"`` (default) — the makespan is NaN, so a truncated trial can
+      never silently pass for a completed one in downstream statistics;
+    * ``"partial"`` — the accumulated ``done + lost`` time is returned, which
+      is exactly what the Python reference loop yields on restart exhaustion;
+    * ``"raise"`` — a ``RuntimeError`` naming the count of unfinished trials.
+
+    ``return_finished=True`` additionally returns the boolean completion mask
+    (shape ``(n_trials,)``), regardless of ``unfinished`` mode.
     """
+    if unfinished not in ("nan", "partial", "raise"):
+        raise ValueError(f"unfinished must be 'nan', 'partial' or 'raise', "
+                         f"got {unfinished!r}")
     dtype = jnp.result_type(float)  # float64 under enable_x64, else float32
     if max_events is None:
         max_events = int(job_steps) + int(max_restarts) + 2
@@ -203,7 +223,7 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     # unit conversion in float64 numpy, identical to the reference loop
     first_steps = (np.asarray(first, np.float64) - off0) / grid_dt
     pool_steps = np.asarray(pool, np.float64) / grid_dt
-    done, lost, restarts = _makespan_kernel(
+    done, lost, restarts, finished = _makespan_kernel(
         jnp.asarray(policy_table, jnp.int32),
         jnp.asarray(first_steps, dtype), jnp.asarray(pool_steps, dtype),
         jnp.int32(job_steps), jnp.int32(age0_idx), jnp.int32(delta_steps),
@@ -211,16 +231,32 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     done = np.asarray(done, np.float64)
     lost = np.asarray(lost, np.float64)
     restarts = np.asarray(restarts, np.float64)
-    return (done + lost) * grid_dt + restarts * restart_overhead
+    finished = np.asarray(finished, bool)
+    out = (done + lost) * grid_dt + restarts * restart_overhead
+    if not finished.all():
+        if unfinished == "raise":
+            raise RuntimeError(
+                f"{int((~finished).sum())}/{finished.size} trials exited "
+                f"unfinished (max_restarts={max_restarts}, "
+                f"max_events={max_events})")
+        if unfinished == "nan":
+            out = np.where(finished, out, np.nan)
+    if return_finished:
+        return out, finished
+    return out
 
 
 def simulate_makespan_engine(policy_table, lifetimes_fn, job_steps: int, *,
                              grid_dt: float = 1.0 / 60.0, delta_steps: int = 1,
                              start_age: float = 0.0, n_trials: int = 2000,
                              seed: int = 0, restart_overhead: float = 0.0,
-                             max_restarts: int = 64) -> np.ndarray:
+                             max_restarts: int = 64, **kw):
     """Drop-in vectorized replacement for ``checkpointing.simulate_makespan``
-    (same sampler protocol, same seed -> same lifetime draws)."""
+    (same sampler protocol, same seed -> same lifetime draws).  Extra
+    keywords (``unfinished``, ``return_finished``, ``max_events``) pass
+    through to :func:`simulate_makespan_batch`; with
+    ``return_finished=True`` the result is a ``(makespans, finished)``
+    tuple instead of a bare array."""
     first, pool = draw_lifetime_pool(lifetimes_fn, n_trials,
                                      max_restarts=max_restarts, seed=seed,
                                      start_age=start_age)
@@ -229,7 +265,7 @@ def simulate_makespan_engine(policy_table, lifetimes_fn, job_steps: int, *,
                                    delta_steps=delta_steps,
                                    start_age=start_age,
                                    restart_overhead=restart_overhead,
-                                   max_restarts=max_restarts)
+                                   max_restarts=max_restarts, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -5,13 +5,25 @@ recent preemption behavior" and "detect policy and phase changes").
 ``OnlineModelTracker`` keeps a rolling window of observed pod/VM lifetimes,
 refits Eq. 1 periodically (pure-JAX LM fitter), and raises a change-point
 flag when recent observations are no longer consistent with the live model
-(two-sided KS test at a configurable threshold).  The training runtime swaps
-the CheckpointManager's distribution on refit, so the DP schedule tracks the
-fleet's actual behavior.
+(two-sided KS test).  The training runtime swaps the CheckpointManager's
+distribution on refit, so the DP schedule tracks the fleet's actual behavior.
+
+The change-point cut is derived from the KS sampling distribution rather
+than being a fixed constant: the live model was itself fitted on ``m``
+samples and is tested against ``n`` fresh ones, so under a stationary fleet
+the statistic fluctuates like a *two-sample* KS,
+
+    D_crit(alpha; m, n) = sqrt(-ln(alpha/2) / 2) * sqrt((m + n) / (m * n)),
+
+(one-sample ``sqrt(-ln(alpha/2) / (2 n))`` when the fit count is unknown).
+A fixed threshold (the old ``ks_threshold=0.15``) ignores both sample sizes
+and trips on pure sampling noise for small windows — e.g. m = n = 128 puts
+the alpha=0.01 critical value at ~0.20, well above 0.15.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Optional
 
@@ -20,21 +32,40 @@ import numpy as np
 from . import distributions, fitting
 
 
+def ks_critical_value(alpha: float, n_recent: int,
+                      n_fit: Optional[int] = None) -> float:
+    """Asymptotic two-sided KS rejection cut at significance ``alpha``.
+
+    ``n_recent`` is the size of the sample being tested; ``n_fit`` the sample
+    count behind the reference CDF (None for an exact/analytic reference,
+    giving the classical one-sample form).
+    """
+    c = math.sqrt(-math.log(alpha / 2.0) / 2.0)
+    if n_fit is None:
+        return c / math.sqrt(n_recent)
+    return c * math.sqrt((n_fit + n_recent) / (n_fit * n_recent))
+
+
 @dataclasses.dataclass
 class OnlineModelTracker:
     window: int = 512              # lifetimes kept
     refit_every: int = 64          # observations between refits
-    ks_threshold: float = 0.15     # change-point sensitivity
+    # change-point sensitivity: None derives the cut from ``ks_alpha`` and
+    # the live sample counts; a float pins the legacy fixed threshold
+    ks_threshold: Optional[float] = None
+    ks_alpha: float = 0.01
     min_samples: int = 64
     prior: Optional[object] = None  # distribution used before enough data
 
     def __post_init__(self):
         self._obs = deque(maxlen=self.window)
         self._since_fit = 0
+        self._fit_n: Optional[int] = None   # samples behind the live model
         self.model = self.prior or distributions.constrained_for()
         self.n_refits = 0
         self.change_points = 0
         self.last_ks = 0.0
+        self.last_cut = float("inf")
 
     def observe(self, lifetime_hours: float) -> bool:
         """Record one preemption; returns True if the model was refit."""
@@ -46,19 +77,26 @@ class OnlineModelTracker:
             return True
         return False
 
+    def _cut(self, n_recent: int) -> float:
+        if self.ks_threshold is not None:
+            return self.ks_threshold
+        return ks_critical_value(self.ks_alpha, n_recent, self._fit_n)
+
     def refit(self):
         data = np.asarray(self._obs)
         # change-point check BEFORE refitting: is the live model still
         # consistent with the recent half of the window?
         recent = data[-max(len(data) // 2, self.min_samples // 2):]
         self.last_ks = float(fitting.ks_statistic(self.model, recent))
-        if self.last_ks > self.ks_threshold and self.n_refits > 0:
+        self.last_cut = self._cut(len(recent))
+        if self.last_ks > self.last_cut and self.n_refits > 0:
             self.change_points += 1
         res = fitting.fit_samples("constrained", data)
         self.model = res.dist
+        self._fit_n = len(data)
         self.n_refits += 1
         self._since_fit = 0
 
     @property
     def drifted(self) -> bool:
-        return self.last_ks > self.ks_threshold
+        return self.last_ks > self.last_cut

@@ -1,0 +1,227 @@
+"""Scenario registry + vectorized sweep runner on top of the engine.
+
+PR 1 removed the simulation bottleneck; this module turns the single static
+per-VM-type evaluation into *scenario diversity*: a scenario names a market
+condition — VM type x diurnal launch phase (paper Obs. 5), with optional
+parameter overrides — and resolves to a :class:`~repro.core.distributions.
+DiurnalConstrained` model.  The sweep runners expand
+
+    (scenario x policy x seed)                 checkpointing executor grids
+    (scenario x policy x cluster_size x seed)  batch-service grids
+
+and drive ``engine.simulate_makespan_batch`` / ``service.run_bag_grid`` with
+the expensive per-distribution setup shared across each scenario's cell
+group: one DP solve + one policy table set + one pre-drawn lifetime pool per
+(scenario, seed) for the executor, one jitted :class:`engine.ReuseTable`
+grid call per scenario for the service.
+
+Adding a scenario is one :func:`register` call (see ROADMAP "Scenario
+sweeps"); ``benchmarks/scenario_sweep.py`` turns the default grid into the
+machine-readable ``BENCH_scenarios.json`` perf artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from . import distributions as dists
+from . import engine
+from . import service as service_mod
+from .policies import checkpointing as ckpt
+from .policies import young_daly as yd
+
+__all__ = [
+    "Scenario", "register", "get", "names", "default_grid",
+    "sweep_checkpointing", "sweep_service", "PHASE_CLOCKS",
+]
+
+# Wall-clock launch hour per diurnal phase label.  "day" is the busiest
+# launch hour (the DiurnalConstrained peak), "night" the quietest, 12 h
+# away; "shoulder" sits at the zero crossing (= the static fit).
+PHASE_CLOCKS: Dict[str, float] = {"day": 20.0, "night": 8.0, "shoulder": 14.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named market condition the policies are evaluated against."""
+
+    name: str
+    vm_type: str = "n1-highcpu-16"
+    phase: str = "shoulder"            # diurnal label (see PHASE_CLOCKS)
+    launch_clock: Optional[float] = None  # overrides the phase's clock
+    dist_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    description: str = ""
+
+    @property
+    def clock(self) -> float:
+        if self.launch_clock is not None:
+            return float(self.launch_clock)
+        return PHASE_CLOCKS[self.phase]
+
+    def dist(self) -> dists.DiurnalConstrained:
+        """The scenario's resolved lifetime model (full pytree contract, so
+        the DP solver, ReuseTable and lifetime pools work unchanged)."""
+        return dists.diurnal_for(self.vm_type, self.clock,
+                                 **dict(self.dist_kwargs))
+
+    def coords(self) -> dict:
+        """Grid coordinates every sweep row is tagged with."""
+        return dict(scenario=self.name, vm_type=self.vm_type,
+                    phase=self.phase, launch_clock=self.clock)
+
+
+_REGISTRY: Dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario, *, replace: bool = False) -> Scenario:
+    if not replace and scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def get(name: str) -> Scenario:
+    return _REGISTRY[name]
+
+
+def names() -> list:
+    return sorted(_REGISTRY)
+
+
+def default_grid(vm_types: Sequence[str] = ("n1-highcpu-16", "n1-highcpu-32"),
+                 phases: Sequence[str] = ("day", "night")) -> list:
+    """The (vm_type x diurnal phase) product as a list of scenarios (shared
+    with the registry; repeated calls return the same objects)."""
+    out = []
+    for vm_type, phase in itertools.product(vm_types, phases):
+        name = f"{phase}/{vm_type}"
+        if name not in _REGISTRY:
+            register(Scenario(
+                name=name, vm_type=vm_type, phase=phase,
+                description=f"{vm_type} launched at the {phase} clock "
+                            f"({PHASE_CLOCKS[phase]:.0f}h)"))
+        out.append(_REGISTRY[name])
+    return out
+
+
+def _resolve(scenarios) -> list:
+    return [get(s) if isinstance(s, str) else s for s in scenarios]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing-executor sweep
+# ---------------------------------------------------------------------------
+
+_CKPT_POLICY_BUILDERS = ("dp", "young_daly", "none")
+
+
+def _policy_tables(policy: str, tables: ckpt.DPTables, job_steps: int,
+                   grid_dt: float, delta_steps: int, dist):
+    if policy == "dp":
+        return engine.dp_policy_table(tables)
+    if policy == "young_daly":
+        # paper Fig. 7 baseline setup, per scenario: the MTTF implied by
+        # THIS distribution's initial failure rate (a day-phase launch has
+        # a faster initial phase and therefore a shorter YD interval), with
+        # the sweep's actual checkpoint-write cost delta
+        tau = float(yd.interval(delta_steps * grid_dt,
+                                yd.mttf_from_initial_rate(dist)))
+        tau_steps = max(1, int(round(tau / grid_dt)))
+        return engine.young_daly_policy_table(tau_steps, job_steps)
+    if policy == "none":
+        return engine.no_checkpoint_policy_table(job_steps)
+    raise ValueError(f"unknown checkpointing policy {policy!r}; "
+                     f"choose from {_CKPT_POLICY_BUILDERS}")
+
+
+def sweep_checkpointing(scenarios: Iterable, *,
+                        policies: Sequence[str] = ("dp", "young_daly", "none"),
+                        seeds: Sequence[int] = (0,), job_steps: int = 300,
+                        n_trials: int = 1000, grid_dt: float = 1.0 / 60.0,
+                        delta_steps: int = 1, max_restarts: int = 64,
+                        restart_overhead: float = 0.0,
+                        n_sweeps: int = 3) -> list:
+    """Expand (scenario x policy x seed) over the vectorized executor.
+
+    Per scenario: ONE DP solve, one table per policy and one pre-drawn
+    device lifetime pool per seed, shared by every policy — so the grid cost
+    is dominated by the batched kernel runs, not per-cell setup.  Returns a
+    list of dict rows (one per cell) with makespan statistics and the
+    unfinished-trial fraction (truncated trials are NaN-flagged by the
+    engine, never silently averaged in).
+    """
+    rows = []
+    for sc in _resolve(scenarios):
+        dist = sc.dist()
+        tables = ckpt.solve(dist, job_steps, grid_dt=grid_dt,
+                            delta_steps=delta_steps, n_sweeps=n_sweeps,
+                            restart_overhead=restart_overhead)
+        ptables = {p: _policy_tables(p, tables, job_steps, grid_dt,
+                                     delta_steps, dist)
+                   for p in policies}
+        lifetimes_fn = ckpt.model_lifetimes_fn(dist)
+        # single-attempt failure probability of the whole job on a fresh VM —
+        # the scenario's Obs. 5 "how gentle is this launch phase" scalar
+        p_fail_fresh = float(dist.cdf(job_steps * grid_dt))
+        for seed in seeds:
+            first, pool = engine.draw_lifetime_pool(
+                lifetimes_fn, n_trials, max_restarts=max_restarts, seed=seed)
+            for policy in policies:
+                mk, finished = engine.simulate_makespan_batch(
+                    ptables[policy], job_steps, first=first, pool=pool,
+                    grid_dt=grid_dt, delta_steps=delta_steps,
+                    restart_overhead=restart_overhead,
+                    max_restarts=max_restarts, unfinished="nan",
+                    return_finished=True)
+                ok = mk[finished]
+                rows.append(dict(
+                    sc.coords(), policy=policy, seed=seed,
+                    n_trials=n_trials, job_steps=job_steps,
+                    p_fail_fresh=p_fail_fresh,
+                    expected_makespan_dp=tables.expected_makespan(job_steps),
+                    makespan_mean=float(ok.mean()) if ok.size else float("nan"),
+                    makespan_p50=float(np.median(ok)) if ok.size else float("nan"),
+                    makespan_p95=float(np.percentile(ok, 95)) if ok.size else float("nan"),
+                    unfinished_frac=float(1.0 - finished.mean())))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# batch-service sweep
+# ---------------------------------------------------------------------------
+
+def sweep_service(scenarios: Iterable, *,
+                  policies: Sequence[str] = ("model", "memoryless"),
+                  cluster_sizes: Sequence[int] = (16,),
+                  seeds: Sequence[int] = (0,), n_jobs: int = 40,
+                  job_hours: float = 2.0, jitter: float = 0.1, **kw) -> list:
+    """Expand (scenario x policy x cluster_size x seed) over the batch
+    service.  Each scenario's cell group goes through ``service.
+    run_bag_grid``, which evaluates the model policy's reuse decisions in a
+    single jitted ReuseTable grid call shared across all of that scenario's
+    cells.  Returns flat dict rows with the headline service metrics.
+    """
+    rows = []
+    for sc in _resolve(scenarios):
+        dist = sc.dist()
+        grid = service_mod.run_bag_grid(
+            vm_types=(sc.vm_type,), policies=tuple(policies),
+            cluster_sizes=tuple(cluster_sizes), seeds=tuple(seeds),
+            n_jobs=n_jobs, job_hours=job_hours, jitter=jitter,
+            dist_for=lambda _vm_type: dist, **kw)
+        for cell in grid:
+            r = cell["result"]
+            rows.append(dict(
+                sc.coords(), policy=cell["policy"],
+                cluster_size=cell["cluster_size"], seed=cell["seed"],
+                n_jobs=n_jobs, job_hours=job_hours,
+                makespan=r.makespan, vm_hours=r.vm_hours, cost=r.cost,
+                on_demand_cost=r.on_demand_cost,
+                cost_reduction=r.cost_reduction,
+                n_preemptions=r.n_preemptions,
+                n_job_failures=r.n_job_failures,
+                job_failure_rate=r.n_job_failures / max(n_jobs, 1)))
+    return rows

@@ -266,8 +266,13 @@ class BatchService:
                 job.done_work = job.length
                 vm.job = None
                 vm.idle_since = now
-                heapq.heappush(events, (now + HOT_SPARE_HOURS, len(jobs) + vm_id,
+                # the global seq counter keeps heap keys unique: the old
+                # ``len(jobs) + vm_id`` tiebreaker could collide with early
+                # seq values, ordering same-timestamp expire events
+                # nondeterministically against finish/preempt events
+                heapq.heappush(events, (now + HOT_SPARE_HOURS, seq,
                                         "expire", vm_id))
+                seq += 1
                 assign(now)
             elif kind == "preempt":
                 vm.terminated = now

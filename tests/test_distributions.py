@@ -13,6 +13,8 @@ from repro.core import distributions as D
 
 FAMILIES = {
     "constrained": lambda: D.Constrained(tau1=1.0, tau2=0.8, b=24.0, A=0.475),
+    "diurnal_day": lambda: D.diurnal_for("n1-highcpu-16", launch_clock=20.0),
+    "diurnal_night": lambda: D.diurnal_for("n1-highcpu-16", launch_clock=8.0),
     "exponential": lambda: D.Exponential(mttf=6.0),
     "weibull": lambda: D.Weibull(lam=0.15, k=0.8),
     "gompertz_makeham": lambda: D.GompertzMakeham(),

@@ -1,10 +1,11 @@
 """Online model maintenance: refitting + change-point detection."""
 import jax
 import numpy as np
+import pytest
 
 from repro.core import distributions as D
 from repro.core import simulator as S
-from repro.core.online import OnlineModelTracker
+from repro.core.online import OnlineModelTracker, ks_critical_value
 
 
 def test_tracker_converges_to_fleet_behavior():
@@ -36,3 +37,52 @@ def test_tracker_detects_policy_change():
     f3_after = float(trk.model.cdf(3.0))
     assert trk.change_points >= 1, "policy change must be detected"
     assert f3_after > f3_before + 0.1, "model must adapt to faster preemption"
+
+
+def test_ks_critical_value_scaling():
+    """The derived cut must shrink with sample count (the fixed 0.15 ignored
+    it) and widen when the reference model is itself a small-sample fit."""
+    one_small = ks_critical_value(0.01, 64)
+    one_large = ks_critical_value(0.01, 1024)
+    assert one_small > one_large > 0
+    np.testing.assert_allclose(one_small / one_large, np.sqrt(1024 / 64),
+                               rtol=1e-12)
+    two = ks_critical_value(0.01, 128, n_fit=128)
+    assert two > ks_critical_value(0.01, 128)
+    np.testing.assert_allclose(two, ks_critical_value(0.01, 128) * np.sqrt(2),
+                               rtol=1e-12)
+    # stricter alpha -> wider cut
+    assert ks_critical_value(0.001, 128) > ks_critical_value(0.05, 128)
+
+
+def test_tracker_small_window_regression():
+    """Regression for the stationary false positive: small refit windows see
+    KS noise well above 0.15 purely from the two-sample geometry, so the
+    derived cut must hold change_points at zero — while a genuinely drifting
+    fleet with the SAME window sizes still trips it."""
+    gt = S.ground_truth_for("n1-highcpu-16")
+    samples = np.asarray(gt.sample(jax.random.PRNGKey(7), (512,)))
+    trk = OnlineModelTracker(min_samples=128, refit_every=128)
+    for x in samples:
+        trk.observe(x)
+    assert trk.change_points == 0
+    assert np.isfinite(trk.last_cut) and trk.last_cut < 0.15
+    # drifting fleet, same tracker geometry
+    k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+    gentle = np.asarray(S.ground_truth_for("n1-highcpu-2").sample(k1, (256,)))
+    harsh = np.asarray(S.ground_truth_for("n1-highcpu-32").sample(k2, (256,)))
+    drift = OnlineModelTracker(min_samples=128, refit_every=128, window=384)
+    for x in np.concatenate([gentle, harsh]):
+        drift.observe(x)
+    assert drift.change_points >= 1
+    assert drift.drifted or drift.change_points >= 1
+
+
+def test_tracker_legacy_fixed_threshold():
+    """A user-pinned ks_threshold bypasses the derived cut entirely."""
+    trk = OnlineModelTracker(ks_threshold=0.4, min_samples=64, refit_every=64)
+    gt = S.ground_truth_for("n1-highcpu-16")
+    for x in np.asarray(gt.sample(jax.random.PRNGKey(3), (192,))):
+        trk.observe(x)
+    assert trk.last_cut == pytest.approx(0.4)
+    assert trk.change_points == 0

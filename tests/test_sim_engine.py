@@ -97,12 +97,57 @@ def test_executor_trivial_cases(dist, tables):
     out = E.simulate_makespan_batch(table, 60, first=first, pool=pool,
                                     grid_dt=GRID)
     np.testing.assert_allclose(out, 1.0, rtol=1e-6)  # 60 steps, no ckpt
-    # immortal failure loop: every VM dies at 0.5h, job needs 1h contiguous
+    # immortal failure loop: every VM dies at 0.5h, job needs 1h contiguous;
+    # unfinished="partial" is the Python reference's restart-exhaustion value
     first = np.full((4,), 0.5)
     pool = np.full((4, 66), 0.5)
     out = E.simulate_makespan_batch(table, 60, first=first, pool=pool,
-                                    grid_dt=GRID, max_restarts=16)
+                                    grid_dt=GRID, max_restarts=16,
+                                    unfinished="partial")
     np.testing.assert_allclose(out, 0.5 * 17, rtol=1e-5)  # 17 failed attempts
+
+
+def test_executor_restart_exhaustion_is_flagged(dist, tables):
+    """Trials that run out of restarts must never masquerade as completed:
+    NaN by default, partial time matching the Python reference on request,
+    error on 'raise', and an explicit mask via return_finished."""
+    table = E.no_checkpoint_policy_table(60)
+    # trials 0/2 finish on the first VM; trials 1/3 can never finish
+    first = np.array([24.0, 0.5, 24.0, 0.5])
+    pool = np.tile(np.array([24.0, 0.5, 24.0, 0.5])[:, None], (1, 66))
+    kw = dict(first=first, pool=pool, grid_dt=GRID, max_restarts=16)
+    out, finished = E.simulate_makespan_batch(table, 60, return_finished=True,
+                                              **kw)
+    assert finished.tolist() == [True, False, True, False]
+    np.testing.assert_allclose(out[finished], 1.0, rtol=1e-6)
+    assert np.isnan(out[~finished]).all()
+    # 'partial' reproduces the reference loop's value for the same pool
+    ref = C.simulate_makespan(C.no_checkpoint_policy_fn(), None, 60,
+                              grid_dt=GRID, max_restarts=16, pool=pool,
+                              first=first)
+    part = E.simulate_makespan_batch(table, 60, unfinished="partial", **kw)
+    np.testing.assert_allclose(part, ref, rtol=1e-5)
+    with pytest.raises(RuntimeError, match="2/4 trials"):
+        E.simulate_makespan_batch(table, 60, unfinished="raise", **kw)
+    with pytest.raises(ValueError):
+        E.simulate_makespan_batch(table, 60, unfinished="bogus", **kw)
+
+
+def test_executor_max_events_truncation_is_flagged(dist, tables):
+    """An undersized max_events cap truncates even finishable trials — the
+    engine must flag them instead of returning the partial makespan."""
+    table = E.young_daly_policy_table(10, 60)
+    first = np.full((4,), 24.0)
+    pool = np.full((4, 66), 24.0)
+    out, finished = E.simulate_makespan_batch(
+        table, 60, first=first, pool=pool, grid_dt=GRID, max_events=3,
+        return_finished=True)
+    assert not finished.any()
+    assert np.isnan(out).all()
+    # a sufficient cap finishes the same workload
+    out2 = E.simulate_makespan_batch(table, 60, first=first, pool=pool,
+                                     grid_dt=GRID, unfinished="raise")
+    assert np.isfinite(out2).all()
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +223,31 @@ def test_service_rebuilds_table_for_new_lengths():
                                 vectorized_reuse=False)
     r_e = svc_exact.run([0.5] * 10)
     assert all(j.finished is not None for j in r_e.jobs)
+
+
+def test_service_event_heap_keys_unique(monkeypatch):
+    """Every event (finish/preempt/expire) must carry a distinct monotonic
+    seq tiebreaker: the old expire key ``len(jobs) + vm_id`` could collide
+    with early seq values, making same-timestamp ordering nondeterministic."""
+    import heapq
+
+    keys = []
+    orig = heapq.heappush
+
+    def record(heap, item):
+        if isinstance(item, tuple) and len(item) == 4:
+            keys.append(item[:2])
+        return orig(heap, item)
+
+    monkeypatch.setattr(heapq, "heappush", record)
+    dist = D.constrained_for("n1-highcpu-32")
+    r = SV.run_bag(dist, n_jobs=30, job_hours=2.0, cluster_size=8, seed=0)
+    assert all(j.finished is not None for j in r.jobs)
+    kinds = len(keys)
+    assert kinds > 30, "expected finish+preempt+expire events to be recorded"
+    assert len(set(keys)) == kinds, "heap keys (time, seq) must be unique"
+    seqs = [s for _, s in keys]
+    assert len(set(seqs)) == len(seqs), "seq tiebreakers must never repeat"
 
 
 # ---------------------------------------------------------------------------
