@@ -1,11 +1,18 @@
 """Shared benchmark utilities: CSV emission, timing + BENCH-JSON output."""
 from __future__ import annotations
 
+import functools
 import json
 import os
+import subprocess
 import time
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Version of the BENCH_*.json envelope written by write_bench_json (the
+# git_commit/bench_schema_version stamps themselves).  Module payloads keep
+# their own "schema" field for module-specific row formats.
+BENCH_SCHEMA_VERSION = 1
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -13,9 +20,36 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+@functools.lru_cache(maxsize=1)
+def git_commit() -> str:
+    """Short hash of the checked-out commit, with a ``+dirty`` suffix when
+    the worktree has uncommitted changes ('unknown' outside a repo)."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        head = out.stdout.strip()
+        if not head:
+            return "unknown"
+        dirty = subprocess.run(["git", "status", "--porcelain"],
+                               cwd=REPO_ROOT, capture_output=True, text=True,
+                               timeout=10).stdout.strip()
+        return f"{head}+dirty" if dirty else head
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def write_bench_json(filename: str, payload: dict, *, emit_as: str):
     """Write a machine-readable ``BENCH_*.json`` artifact at the repo root
-    (the cross-PR perf-trajectory contract) and emit its CSV row."""
+    (the cross-PR perf-trajectory contract) and emit its CSV row.
+
+    Every artifact is stamped with the producing git commit and the
+    envelope schema version, so the perf trajectory stays diffable across
+    PRs without guessing which commit wrote which numbers.
+    """
+    payload = dict(payload)
+    payload["git_commit"] = git_commit()
+    payload["bench_schema_version"] = BENCH_SCHEMA_VERSION
     path = os.path.join(REPO_ROOT, filename)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,32 +1,38 @@
-"""Diurnal scenario-sweep benchmark (paper Obs. 5 x Figs. 7/8 workloads).
+"""Scenario-sweep benchmark (paper Obs. 5 x Figs. 7/8 workloads) with the
+batched-vs-serial scenario-axis comparison.
 
-Expands the default (diurnal phase x VM type) scenario grid from
-``repro.core.scenarios`` over both vectorized evaluation paths:
+Expands the grown default (zone x diurnal phase x VM type) scenario grid
+(>= 8 scenarios) from ``repro.core.scenarios`` over both vectorized
+evaluation paths:
 
-  * the checkpointing executor — (scenario x policy x seed) cells, one DP
-    solve + one shared device lifetime pool per (scenario, seed);
-  * the batch service — (scenario x policy x cluster x seed) cells, one
-    jitted ReuseTable grid call per scenario.
+  * the checkpointing executor — (scenario x policy x seed) cells on the
+    BATCHED path: one ``solve_batch`` DP call, one device pool call per
+    seed, one scenario-batched executor call per (seed, policy);
+  * the batch service — (scenario x policy x cluster x seed) cells with all
+    scenarios' reuse grids from one vmapped ``ReuseTable.batch`` call.
 
-Besides the CSV rows, writes machine-readable ``BENCH_scenarios.json`` at
-the repo root so the perf/quality trajectory extends beyond the single
-static Fig. 7/8 workloads:
+It also times the serial per-scenario path (one DP solve + one numpy pool
+round-trip per scenario — the pre-batching implementation, retained as
+``mode="serial"``) against the batched path, and re-runs the full sweep
+serially to confirm the rows agree.  ``BENCH_scenarios.json`` (repo root)
+records:
 
-    {"schema": 1, "mode": "full"|"quick", "generated_unix": ...,
-     "grid": {"phases": [...], "vm_types": [...],
+    {"schema": 2, "mode": "full"|"quick", "generated_unix": ...,
+     "grid": {"zones": [...], "phases": [...], "vm_types": [...],
               "checkpoint_policies": [...], "service_policies": [...],
               "seeds": [...]},
      "checkpointing": {"workload": {...}, "wall_clock_s": ...,
-                       "rows": [...per-cell makespan stats...]},
-     "service": {"workload": {...}, "wall_clock_s": ...,
-                 "rows": [...per-cell cost/failure stats...]},
-     "summary": {"night_over_day_fail_prob": ...,
-                 "night_over_day_makespan": ...,
-                 "night_over_day_failure_rate": ...,
-                 "cost_reduction_mean": ...}}
+                       "rows": [...batched per-cell makespan stats...]},
+     "service": {"workload": {...}, "wall_clock_s": ..., "rows": [...]},
+     "batch_vs_serial": {"n_scenarios": ..., "solver": {...}, "pool": {...},
+                         "combined_speedup": ...,
+                         "serial_sweep_wall_clock_s": ...,
+                         "dp_values_bitexact": ...,
+                         "rows_max_rel_diff_makespan_mean": ...},
+     "summary": {...Obs. 5 ratios + batched_combined_speedup...}}
 
-``--quick`` (or run(quick=True)) shrinks trials/jobs so the module finishes
-in seconds; the JSON records which mode produced it.
+``--quick`` (or run(quick=True)) shrinks trials/steps so the module finishes
+fast; the JSON records which mode produced it.
 """
 from __future__ import annotations
 
@@ -34,10 +40,13 @@ import time
 
 import numpy as np
 
+from repro.core import engine as E
 from repro.core import scenarios as SC
+from repro.core.policies import checkpointing as ckpt
 
 from .common import emit, write_bench_json
 
+ZONES = ("us-east1-b", "us-central1-a")
 PHASES = ("day", "night")
 VM_TYPES = ("n1-highcpu-16", "n1-highcpu-32")
 CKPT_POLICIES = ("dp", "young_daly", "none")
@@ -51,14 +60,65 @@ def _phase_mean(rows, phase, key, **match):
     return float(np.mean(vals)) if vals else float("nan")
 
 
+def _bench_batch_vs_serial(dist_list, *, job_steps, n_trials, grid_dt,
+                           max_restarts, seeds) -> dict:
+    """Warm-timed comparison of the per-scenario setup work the batched
+    scenario axis replaces: the DP solves and the lifetime-pool draws."""
+    S = len(dist_list)
+    # warm both compile caches at the measured shapes
+    ckpt.solve(dist_list[0], job_steps, grid_dt=grid_dt)
+    ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt)
+    E.draw_lifetime_pool(ckpt.model_lifetimes_fn(dist_list[0]), n_trials,
+                         max_restarts=max_restarts, seed=seeds[0])
+    E.draw_lifetime_pool_batch(dist_list, n_trials,
+                               max_restarts=max_restarts, seed=seeds[0])
+
+    t0 = time.perf_counter()
+    serial_tabs = [ckpt.solve(d, job_steps, grid_dt=grid_dt)
+                   for d in dist_list]
+    t_solver_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batch_tabs = ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt)
+    t_solver_batched = time.perf_counter() - t0
+    bitexact = all(
+        np.array_equal(serial_tabs[s].V, batch_tabs.V[s])
+        and np.array_equal(serial_tabs[s].K, batch_tabs.K[s])
+        for s in range(S))
+
+    t0 = time.perf_counter()
+    for seed in seeds:
+        for d in dist_list:
+            E.draw_lifetime_pool(ckpt.model_lifetimes_fn(d), n_trials,
+                                 max_restarts=max_restarts, seed=seed)
+    t_pool_serial = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for seed in seeds:
+        E.draw_lifetime_pool_batch(dist_list, n_trials,
+                                   max_restarts=max_restarts, seed=seed)
+    t_pool_batched = time.perf_counter() - t0
+
+    return {
+        "n_scenarios": S,
+        "solver": {"serial_s": t_solver_serial,
+                   "batched_s": t_solver_batched,
+                   "speedup": t_solver_serial / t_solver_batched},
+        "pool": {"serial_s": t_pool_serial, "batched_s": t_pool_batched,
+                 "speedup": t_pool_serial / t_pool_batched},
+        "combined_speedup": (t_solver_serial + t_pool_serial)
+                            / (t_solver_batched + t_pool_batched),
+        "dp_values_bitexact": bool(bitexact),
+    }
+
+
 def run(quick: bool = False):
-    grid = SC.default_grid(vm_types=VM_TYPES, phases=PHASES)
+    grid = SC.default_grid(vm_types=VM_TYPES, phases=PHASES, zones=ZONES)
     seeds = (0,) if quick else (0, 1)
 
     ck_workload = dict(job_steps=180 if quick else 300,
-                       n_trials=300 if quick else 2000,
+                       n_trials=300 if quick else 4000,
                        grid_dt=1.0 / 60.0, delta_steps=1, max_restarts=64)
     job_steps, n_trials = ck_workload["job_steps"], ck_workload["n_trials"]
+
     t0 = time.perf_counter()
     ck_rows = SC.sweep_checkpointing(grid, policies=CKPT_POLICIES,
                                      seeds=seeds, **ck_workload)
@@ -68,6 +128,30 @@ def run(quick: bool = False):
          f"wall_s={t_ck:.2f};"
          f"day_dp={_phase_mean(ck_rows, 'day', 'makespan_mean', policy='dp'):.3f}h;"
          f"night_dp={_phase_mean(ck_rows, 'night', 'makespan_mean', policy='dp'):.3f}h")
+
+    # batched-vs-serial: the per-scenario setup (DP solves + pool draws)
+    dist_list = [sc.dist() for sc in grid]
+    bvs = _bench_batch_vs_serial(
+        dist_list, job_steps=job_steps, n_trials=n_trials,
+        grid_dt=ck_workload["grid_dt"],
+        max_restarts=ck_workload["max_restarts"], seeds=seeds)
+    t0 = time.perf_counter()
+    ck_rows_serial = SC.sweep_checkpointing(grid, policies=CKPT_POLICIES,
+                                            seeds=seeds, mode="serial",
+                                            **ck_workload)
+    bvs["serial_sweep_wall_clock_s"] = time.perf_counter() - t0
+    rel = [abs(a["makespan_mean"] - b["makespan_mean"])
+           / max(abs(b["makespan_mean"]), 1e-9)
+           for a, b in zip(ck_rows, ck_rows_serial)
+           if np.isfinite(a["makespan_mean"]) and np.isfinite(b["makespan_mean"])]
+    bvs["rows_max_rel_diff_makespan_mean"] = float(np.max(rel)) if rel else 0.0
+    emit(f"scenarios/batch_vs_serial_S{len(grid)}",
+         bvs["solver"]["batched_s"] / len(grid) * 1e6,
+         f"solver={bvs['solver']['speedup']:.2f}x;"
+         f"pool={bvs['pool']['speedup']:.2f}x;"
+         f"combined={bvs['combined_speedup']:.2f}x;"
+         f"dp_bitexact={bvs['dp_values_bitexact']};"
+         f"rows_maxrel={bvs['rows_max_rel_diff_makespan_mean']:.1e}")
 
     n_jobs = 20 if quick else 60
     cluster_sizes = (8,) if quick else (16,)
@@ -90,10 +174,11 @@ def run(quick: bool = False):
     night_fr = _phase_mean(sv_rows, "night", "job_failure_rate",
                            policy="model")
     payload = {
-        "schema": 1,
+        "schema": 2,
         "mode": "quick" if quick else "full",
         "generated_unix": time.time(),
-        "grid": {"phases": list(PHASES), "vm_types": list(VM_TYPES),
+        "grid": {"zones": list(ZONES), "phases": list(PHASES),
+                 "vm_types": list(VM_TYPES),
                  "checkpoint_policies": list(CKPT_POLICIES),
                  "service_policies": list(SERVICE_POLICIES),
                  "seeds": list(seeds)},
@@ -104,6 +189,7 @@ def run(quick: bool = False):
             "workload": {"n_jobs": n_jobs, "job_hours": 2.0,
                          "cluster_sizes": list(cluster_sizes)},
             "wall_clock_s": t_sv, "rows": sv_rows},
+        "batch_vs_serial": bvs,
         "summary": {
             # Obs. 5 headline: night launches preempt less (< 1).  Makespan
             # need not follow — night failures arrive later in a VM's life,
@@ -113,7 +199,8 @@ def run(quick: bool = False):
             "night_over_day_makespan": night_mk / day_mk,
             "night_over_day_failure_rate":
                 night_fr / day_fr if day_fr else float("nan"),
-            "cost_reduction_mean": red},
+            "cost_reduction_mean": red,
+            "batched_combined_speedup": bvs["combined_speedup"]},
     }
     write_bench_json("BENCH_scenarios.json", payload, emit_as="scenarios/json")
 

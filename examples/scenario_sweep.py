@@ -1,6 +1,11 @@
 """Diurnal scenario sweep (paper Obs. 5): how much gentler are night
 launches, and does the advantage survive both evaluation paths?
 
+The default grid now spans (zone x phase x vm_type) and the sweep runs the
+batched scenario axis end-to-end: one DP solve, one device lifetime pool
+and one scenario-batched executor call cover the whole grid (see
+`scenarios.sweep_checkpointing(mode=...)`).
+
 Run: PYTHONPATH=src python examples/scenario_sweep.py
 """
 import numpy as np
@@ -15,13 +20,13 @@ print("\ncheckpointing executor (5h job, DP vs no-checkpoint, 500 trials):")
 rows = scenarios.sweep_checkpointing(grid, policies=("dp", "none"),
                                      job_steps=300, n_trials=500)
 for r in rows:
-    print(f"  {r['scenario']:22s} {r['policy']:5s}: "
+    print(f"  {r['scenario']:34s} {r['policy']:5s}: "
           f"mean {r['makespan_mean']:5.2f}h  p95 {r['makespan_p95']:5.2f}h")
 
 print("\nbatch service (30 x 2h jobs, 8 VMs):")
 for r in scenarios.sweep_service(grid, policies=("model",),
                                  cluster_sizes=(8,), n_jobs=30):
-    print(f"  {r['scenario']:22s}: makespan {r['makespan']:5.1f}h  "
+    print(f"  {r['scenario']:34s}: makespan {r['makespan']:5.1f}h  "
           f"failures {r['n_job_failures']:2d}  "
           f"{r['cost_reduction']:.2f}x cheaper than on-demand")
 

@@ -411,6 +411,48 @@ VM_TYPE_PARAMS = {
 }
 
 
+def stack(dists):
+    """Stack same-family distributions into ONE batched pytree whose
+    parameter leaves carry a leading ``(S,)`` scenario axis.
+
+    The result is still an instance of the family class, so the whole
+    ``cdf/pdf/hazard/partial_expectation/icdf`` contract is preserved:
+    evaluate it per scenario with ``jax.vmap`` (grid-shaped queries), or
+    directly via broadcasting when each leaf lines up with the query batch
+    (e.g. ``stack(ds).cdf(jnp.full(S, 3.0))``).  This is the distribution-
+    layer entry point of the engine's leading-axis convention (see
+    ``repro.core.engine``): ``checkpointing.solve_batch``,
+    ``engine.draw_lifetime_pool_batch`` and ``engine.ReuseTable.batch``
+    all consume scenario *lists* and stack internally.
+
+    All inputs must be instances of the same registered family (mixing
+    e.g. ``Constrained`` with ``Exponential`` would stack incompatible
+    parameterizations leaf-by-leaf).
+    """
+    dists = list(dists)
+    if not dists:
+        raise ValueError("stack() needs at least one distribution")
+    cls = type(dists[0])
+    if any(type(d) is not cls for d in dists[1:]):
+        raise TypeError("stack() requires one distribution family, got "
+                        f"{sorted({type(d).__name__ for d in dists})}")
+    dtype = jnp.result_type(float)
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack([jnp.asarray(l, dtype) for l in leaves]),
+        *dists)
+
+
+def unstack(dist):
+    """Invert :func:`stack`: a batched distribution -> list of per-scenario
+    distributions (leaves sliced along the leading axis)."""
+    leaves = jax.tree_util.tree_leaves(dist)
+    if not leaves or jnp.ndim(leaves[0]) == 0:
+        raise ValueError("unstack() expects a stacked distribution with a "
+                         "leading scenario axis")
+    n = leaves[0].shape[0]
+    return [jax.tree_util.tree_map(lambda l: l[i], dist) for i in range(n)]
+
+
 def constrained_for(vm_type: str = "n1-highcpu-16") -> Constrained:
     return Constrained(**VM_TYPE_PARAMS[vm_type])
 

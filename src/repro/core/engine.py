@@ -33,6 +33,25 @@ operations in the same order as the Python reference, so makespans match
 bit-for-bit.  In default float32 mode results agree to ~1e-6 relative, which
 is far below Monte-Carlo noise.
 
+Leading-axis convention (scenario batching): every batched entry point
+treats an optional leading axis as the *scenario* axis ``S``, threaded
+end-to-end from the distribution layer up:
+
+  * ``distributions.stack(dists)`` stacks a scenario list into one pytree
+    whose parameter leaves carry a leading ``(S,)`` axis;
+  * ``checkpointing.solve_batch`` returns ``(S, j_max+1, t_max+1)`` V/K
+    tables from one compiled call;
+  * :func:`draw_lifetime_pool_batch` draws ``(S, n_trials, max_restarts+2)``
+    pools on-device in one shot;
+  * :func:`simulate_makespan_batch` accepts the leading axis on
+    ``policy_table`` (optional — a 2-D table is shared), ``first`` and
+    ``pool``, vmapping the event kernel and returning ``(S, n_trials)``
+    makespans.  The float64 bit-exactness contract holds per scenario
+    slice: on a shared pool each slice equals the corresponding unbatched
+    run bit-for-bit;
+  * :meth:`ReuseTable.batch` evaluates all scenarios' reuse grids in one
+    vmapped call.
+
 Typical use (Fig. 7 workload)::
 
     tables = checkpointing.solve(dist, 720)
@@ -52,12 +71,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import distributions as dists
+from . import distributions as dists_mod
 from .policies import scheduling as sched_policy
 
 __all__ = [
     "dp_policy_table", "young_daly_policy_table", "no_checkpoint_policy_table",
-    "draw_lifetime_pool", "simulate_makespan_batch", "simulate_makespan_engine",
+    "draw_lifetime_pool", "draw_lifetime_pool_batch",
+    "simulate_makespan_batch", "simulate_makespan_engine",
     "ReuseTable",
 ]
 
@@ -107,6 +127,68 @@ def draw_lifetime_pool(lifetimes_fn: Callable, n_trials: int, *,
     except TypeError:  # sampler without conditioning support
         first = pool[:, 0].copy()
     return first, pool
+
+
+def capped_icdf_draw(dist, u, fl, L):
+    """The capped inverse-CDF draw both samplers share: lifetimes
+    ``icdf(min(u, fl * (1 - 1e-6)))`` with the residual ``u >= fl`` mass
+    preempted AT the deadline ``L``.  Broadcasts over scalar parameters
+    (``checkpointing.model_lifetimes_fn``, the numpy reference) and
+    ``(S, 1)``-stacked ones (:func:`draw_lifetime_pool_batch`) — keeping
+    this contract in ONE place is what keeps the two paths bit-identical
+    under x64."""
+    t = np.asarray(dist.icdf(jnp.minimum(jnp.asarray(u),
+                                         jnp.asarray(fl * (1.0 - 1e-6)))),
+                   np.float64)
+    return np.where(u >= fl, L, t)
+
+
+def draw_lifetime_pool_batch(dists, n_trials: int, *, max_restarts: int = 64,
+                             seed: int = 0, start_age: float = 0.0):
+    """Batched :func:`draw_lifetime_pool` for a scenario list: ``first`` has
+    shape ``(S, n_trials)`` and ``pool`` ``(S, n_trials, max_restarts + 2)``.
+
+    The uniforms come from ONE ``np.random.default_rng(seed)`` stream in the
+    reference draw order (pool first, then the conditioned first draw), so
+    every scenario sees exactly the uniforms the serial per-scenario path
+    would see for that seed.  The inverse CDF then runs as one on-device
+    bisection over all ``S * n_trials * (max_restarts + 2)`` lifetimes —
+    replacing S per-scenario numpy round-trips — by stacking each
+    scenario's launch-phase-resolved parameters to ``(S, 1)`` so the
+    distribution methods broadcast over the trailing draw axis.
+
+    Exactness: per-scenario parameters are resolved with the same scalar
+    eager ops as ``checkpointing.model_lifetimes_fn`` (``effective()`` for
+    the diurnal family), so under x64 every scenario slice reproduces the
+    numpy-reference pool bit-for-bit; in default float32 mode slices agree
+    to float32 precision (~1e-6), far below Monte-Carlo noise.
+    """
+    dists = list(dists)
+    dtype = jnp.result_type(float)
+    # normalize leaves first (as model_lifetimes_fn does), then resolve any
+    # launch-phase modulation with the same scalar eager ops the reference
+    # sampler performs at trace time; finally stack to (S, 1)
+    norm = [jax.tree_util.tree_map(lambda l: jnp.asarray(l, dtype), d)
+            for d in dists]
+    eff = [d.effective() if hasattr(d, "effective") else d for d in norm]
+    d_b = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls)[:, None], *eff)
+    S = len(dists)
+    rng = np.random.default_rng(seed)
+    u_pool = rng.uniform(size=n_trials * (max_restarts + 2))
+    u_first = rng.uniform(size=n_trials)
+    # scalar pre/post quantities, per scenario, as the numpy reference
+    fl = np.array([float(d.cdf(d.L)) for d in eff])[:, None]
+    L = np.array([float(d.L) for d in eff])[:, None]
+    pool = capped_icdf_draw(d_b, np.broadcast_to(u_pool, (S, u_pool.size)),
+                            fl, L)
+    if start_age > 0:
+        f_lo = np.array([float(d.cdf(start_age)) for d in eff])[:, None]
+    else:
+        f_lo = np.zeros((S, 1))
+    first = capped_icdf_draw(d_b, f_lo + u_first[None, :] * (1.0 - f_lo),
+                             fl, L)
+    return first, pool.reshape(S, n_trials, max_restarts + 2)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +265,17 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
             out["remaining"] == 0)
 
 
+# scenario-batched kernels: vmap the event loop over the leading (S,) axis.
+# The while_loop batching rule freezes finished slices with selects, so each
+# scenario slice performs the reference IEEE operations — on a shared pool a
+# float64 slice is bit-identical to the unbatched kernel.
+_KERNEL_SCALARS = (None,) * 5
+_makespan_kernel_batch = jax.jit(jax.vmap(
+    _makespan_kernel.__wrapped__, in_axes=(0, 0, 0) + _KERNEL_SCALARS))
+_makespan_kernel_batch_shared = jax.jit(jax.vmap(
+    _makespan_kernel.__wrapped__, in_axes=(None, 0, 0) + _KERNEL_SCALARS))
+
+
 def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
                             grid_dt: float = 1.0 / 60.0, delta_steps: int = 1,
                             start_age: float = 0.0,
@@ -198,6 +291,13 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     checkpoint write) loses progress back to the last durable checkpoint and
     the job resumes on a fresh VM after ``restart_overhead`` hours.  Returns
     makespans (hours), shape ``(n_trials,)``.
+
+    Scenario batching (leading-axis convention): when ``pool`` has a
+    leading scenario axis — shape ``(S, n_trials, max_restarts + 2)``, with
+    ``first`` of shape ``(S, n_trials)`` — the event kernel is vmapped over
+    it and the result is ``(S, n_trials)``.  ``policy_table`` may then be
+    either per-scenario ``(S, j_max+1, t_axis)`` or a shared 2-D table.
+    Each scenario slice keeps the bit-exactness contract above.
 
     Trials can exit the event loop *unfinished* — either their ``max_restarts``
     budget is exhausted or the whole batch hits the ``max_events`` safety cap.
@@ -223,8 +323,21 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     # unit conversion in float64 numpy, identical to the reference loop
     first_steps = (np.asarray(first, np.float64) - off0) / grid_dt
     pool_steps = np.asarray(pool, np.float64) / grid_dt
-    done, lost, restarts, finished = _makespan_kernel(
-        jnp.asarray(policy_table, jnp.int32),
+    table = np.asarray(policy_table, np.int32)
+    if pool_steps.ndim == 3:                 # leading scenario axis
+        if first_steps.shape != pool_steps.shape[:2]:
+            raise ValueError(
+                f"scenario-batched pool {pool_steps.shape} needs first of "
+                f"shape {pool_steps.shape[:2]}, got {first_steps.shape}")
+        kernel = (_makespan_kernel_batch if table.ndim == 3
+                  else _makespan_kernel_batch_shared)
+    elif table.ndim == 3:
+        raise ValueError("per-scenario policy_table needs a scenario-batched "
+                         "pool (S, n_trials, max_restarts + 2)")
+    else:
+        kernel = _makespan_kernel
+    done, lost, restarts, finished = kernel(
+        jnp.asarray(table),
         jnp.asarray(first_steps, dtype), jnp.asarray(pool_steps, dtype),
         jnp.int32(job_steps), jnp.int32(age0_idx), jnp.int32(delta_steps),
         jnp.int32(max_restarts), jnp.int32(max_events))
@@ -278,6 +391,14 @@ def _reuse_grid(dist, T_values, L, n_age):
     return sched_policy.reuse_decision(dist, T_values[:, None], age[None, :])
 
 
+@functools.partial(jax.jit, static_argnames=("n_age",))
+def _reuse_grid_batch(dist, T_values, L, n_age):
+    """(S,)-stacked distribution -> (S, len(T_values), n_age) decisions in
+    one compiled call (vmap of the per-scenario grid)."""
+    return jax.vmap(
+        lambda d: _reuse_grid.__wrapped__(d, T_values, L, n_age))(dist)
+
+
 class ReuseTable:
     """Precomputed reuse decisions over (remaining work x VM age).
 
@@ -288,12 +409,29 @@ class ReuseTable:
     ``n_age`` points over [0, L] (nearest), 1-min resolution by default.
     """
 
-    def __init__(self, dist, T_values, *, n_age: int = 1441):
+    def __init__(self, dist, T_values, *, n_age: int = 1441, _table=None):
         self.T_values = np.asarray(np.sort(np.unique(T_values)), np.float64)
-        self.L = float(dist.L)
+        self.L = float(np.asarray(dist.L).reshape(-1)[0])
         self.n_age = int(n_age)
         self.table = np.asarray(_reuse_grid(
-            dist, jnp.asarray(self.T_values), self.L, self.n_age))
+            dist, jnp.asarray(self.T_values), self.L, self.n_age)) \
+            if _table is None else np.asarray(_table)
+
+    @classmethod
+    def batch(cls, dists, T_values, *, n_age: int = 1441) -> list:
+        """Build one table per scenario from a SINGLE vmapped grid call
+        (leading-axis convention; the scenarios must share ``L``).  Returns
+        a list of per-scenario :class:`ReuseTable` views, interchangeable
+        with individually constructed ones."""
+        dists = list(dists)
+        L = float(dists[0].L)
+        if any(abs(float(d.L) - L) > 1e-12 for d in dists[1:]):
+            raise ValueError("ReuseTable.batch() requires a shared L")
+        T_values = np.asarray(np.sort(np.unique(T_values)), np.float64)
+        grids = np.asarray(_reuse_grid_batch(
+            dists_mod.stack(dists), jnp.asarray(T_values), L, int(n_age)))
+        return [cls(d, T_values, n_age=n_age, _table=grids[i])
+                for i, d in enumerate(dists)]
 
     def decide(self, remaining_work: float, vm_age: float) -> bool:
         ti = int(np.searchsorted(self.T_values, remaining_work))

@@ -60,6 +60,33 @@ class DPTables:
         return float(self.V[int(job_steps), int(age_idx)])
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchDPTables:
+    """Solved DP for a whole scenario batch: V/K carry a leading ``(S,)``
+    scenario axis (see the leading-axis convention in ``repro.core.engine``).
+    ``tables(s)`` returns a plain per-scenario :class:`DPTables` view for the
+    existing single-scenario API."""
+    V: np.ndarray                # (S, j_max+1, t_max+1)
+    K: np.ndarray                # (S, j_max+1, t_max+1)
+    grid_dt: float
+    delta_steps: int
+    restart_overhead: float
+    horizon_idx: int
+
+    def __len__(self) -> int:
+        return self.V.shape[0]
+
+    def tables(self, s: int) -> DPTables:
+        return DPTables(V=self.V[s], K=self.K[s], grid_dt=self.grid_dt,
+                        delta_steps=self.delta_steps,
+                        restart_overhead=self.restart_overhead,
+                        horizon_idx=self.horizon_idx)
+
+    def expected_makespan(self, s: int, job_steps: int,
+                          age_idx: int = 0) -> float:
+        return float(self.V[int(s), int(job_steps), int(age_idx)])
+
+
 @functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
                                              "n_sweeps"))
 def _solve_tables(Fc, Hc, grid_dt, restart_overhead, *, j_max: int, t_max: int,
@@ -137,6 +164,169 @@ def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     return DPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                     delta_steps=int(delta_steps),
                     restart_overhead=restart_overhead, horizon_idx=t_max)
+
+
+@functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
+                                             "n_sweeps"))
+def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, *, j_max: int,
+                        t_max: int, delta_steps: int, n_sweeps: int):
+    """Batched DP solve: ``Fc``/``Hc`` are stacked ``(S, t_max+1)`` grids,
+    the result ``(V, K)`` has shapes ``(S, j_max+1, t_max+1)``.
+
+    Per scenario slice this is BIT-IDENTICAL to :func:`_solve_tables` (the
+    retained reference kernel) — the per-candidate arithmetic keeps the
+    reference expression tree so XLA's FMA contraction matches — while
+    restructuring the loop body for throughput:
+
+      * the (VM age x candidate interval) grids ``p_fail``/``e_lost`` are
+        j-invariant, so they are hoisted out of the 900-iteration loop (the
+        reference recomputes them, with two ``(T, I)`` gathers and three
+        divisions, every iteration);
+      * only the final-segment candidate ``i == j`` (no trailing checkpoint,
+        ``w = i``) differs per j, so it is patched as a single column
+        instead of re-selecting full ``w``/``end`` grids;
+      * ``argmin`` is computed as a min-reduce plus a first-match max-reduce
+        (XLA CPU's variadic argmin reduce was half the body's wall-clock);
+      * the j loop runs in three segments (thirds of the remaining-work
+        axis) so early rows do not scan the full candidate axis; all
+        segments share column-prefix views of one precomputed grid set.
+    """
+    dt = grid_dt
+    T = t_max + 1
+    t_idx = jnp.arange(T)
+    S = Fc.shape[0]
+    Sc = 1.0 - Fc
+    dead = Sc < 1e-6                                      # (S, T)
+    if j_max >= 24:    # keep every segment SIMD-wide: a very narrow cost
+        j1 = (j_max + 1) // 3           # matrix compiles to different (ULP-
+        j2 = 2 * (j_max + 1) // 3       # shifting) scalar codegen
+        segs = [(j1, 1, j1 + 1), (j2, j1 + 1, j2 + 1),
+                (j_max, j2 + 1, j_max + 1)]
+    else:
+        segs = [(j_max, 1, j_max + 1)]
+
+    i_full = jnp.arange(1, j_max + 1)
+
+    def grids(Fc1, Hc1, w):
+        # identical per-element arithmetic to the reference body
+        end = jnp.clip(t_idx[:, None] + w[None, :], 0, t_max)
+        Ft = Fc1[t_idx][:, None]
+        Fe = Fc1[end]
+        St = jnp.maximum(1.0 - Ft, _EPS)
+        p_fail = jnp.clip((Fe - Ft) / St, 0.0, 1.0)
+        dF = jnp.maximum(Fe - Ft, _EPS)
+        e_lost = (Hc1[end] - Hc1[t_idx][:, None]) / dF - t_idx[:, None] * dt
+        e_lost = jnp.clip(e_lost, 0.0, w[None, :] * dt)
+        return p_fail, e_lost, end
+
+    pf_nf_f, el_nf_f, end_nf_f = jax.vmap(
+        lambda f, h: grids(f, h, i_full + delta_steps))(Fc, Hc)
+    pf_fd_f, el_fd_f, end_fd_f = jax.vmap(
+        lambda f, h: grids(f, h, i_full))(Fc, Hc)
+
+    def make_seg_views(I_len):
+        # a shorter candidate axis is a column prefix of the full grids
+        # (column i's values depend only on i), so segments share one
+        # precomputed set; end grids are parameter-independent (one copy)
+        return (i_full[:I_len], i_full[:I_len] + delta_steps,
+                pf_nf_f[:, :, :I_len], el_nf_f[:, :, :I_len],
+                pf_fd_f[:, :, :I_len], el_fd_f[:, :, :I_len],
+                end_nf_f[0][:, :I_len], end_fd_f[0][:, :I_len])
+
+    seg_data = [make_seg_views(I) for I, _, _ in segs]
+
+    def body_factory(sd, R):
+        i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
+        I_len = int(i_ax.shape[0])
+
+        def body(j, VK):
+            V, K = VK
+            valid = i_ax <= j
+
+            def one(V1, pf1, el1, pffd1, elfd1, Rj1):
+                Vg = V1[(j - i_ax)[None, :], end_nf]
+                v_succ = w_nf[None, :] * dt + Vg
+                v_fail = el1 + Rj1
+                cost = (1.0 - pf1) * v_succ + pf1 * v_fail
+                # final-segment candidate i == j: w = i, V[j-i] == V[0]
+                colV = V1[0, end_fd[:, j - 1]]
+                vs_f = jnp.asarray(j, cost.dtype) * dt + colV
+                cost_f = (1.0 - pffd1[:, j - 1]) * vs_f \
+                    + pffd1[:, j - 1] * (elfd1[:, j - 1] + Rj1)
+                cost = jax.lax.dynamic_update_slice(cost, cost_f[:, None],
+                                                    (0, j - 1))
+                costm = jnp.where(valid[None, :], cost, jnp.inf)
+                vj = jnp.min(costm, axis=1)
+                # first-match argmin: maximize (I_len - idx) over the minima
+                eq = (costm == vj[:, None]) & valid[None, :]
+                payload = jnp.where(eq, I_len - jnp.arange(I_len)[None, :], 0)
+                kj = (I_len + 1 - jnp.max(payload, axis=1)).astype(jnp.int32)
+                return vj, kj
+
+            vj, kj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd,
+                                   R[:, j][:, None])
+            vj = jnp.where(dead, R[:, j][:, None], vj)
+            kj = jnp.where(dead, jnp.minimum(j, j_max), kj)
+            V = jax.vmap(lambda V1, r: jax.lax.dynamic_update_slice(
+                V1, r[None, :], (j, 0)))(V, vj.astype(V.dtype))
+            K = jax.vmap(lambda K1, r: jax.lax.dynamic_update_slice(
+                K1, r[None, :], (j, 0)))(K, kj)
+            return V, K
+
+        return body
+
+    def one_sweep(carry, _):
+        V_prev, _ = carry
+        R = restart_overhead + V_prev[:, :, 0]            # (S, j_max+1)
+        V0 = jnp.zeros((S, j_max + 1, T), jnp.float32)
+        K0 = jnp.zeros((S, j_max + 1, T), jnp.int32)
+        VK = (V0, K0)
+        for sd, (_, lo, hi) in zip(seg_data, segs):
+            VK = jax.lax.fori_loop(lo, hi, body_factory(sd, R), VK)
+        return VK, None
+
+    v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
+    V_init = jnp.broadcast_to(v0, (S, j_max + 1, T)).astype(jnp.float32)
+    (V, K), _ = jax.lax.scan(one_sweep,
+                             (V_init, jnp.zeros((S, j_max + 1, T), jnp.int32)),
+                             None, length=n_sweeps)
+    return V, K
+
+
+def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
+                delta_steps: int = 1, n_sweeps: int = 3,
+                restart_overhead: float = 0.0) -> BatchDPTables:
+    """Solve the checkpointing DP for a whole scenario batch in ONE compiled
+    call (see :func:`_solve_tables_batch`).
+
+    ``dists`` is a sequence of distributions sharing one deadline ``L``.
+    Each scenario's ``Fc``/``Hc`` grid is built exactly as :func:`solve`
+    builds it (same eager ops), then the stacked grids go through the
+    batched kernel — so every returned slice matches the per-scenario
+    :func:`solve` result table-for-table, bit-exactly.
+    """
+    dists = list(dists)
+    if not dists:
+        raise ValueError("solve_batch() needs at least one distribution")
+    L = float(dists[0].L)
+    if any(abs(float(d.L) - L) > 1e-12 for d in dists[1:]):
+        raise ValueError("solve_batch() requires a shared deadline L")
+    t_max = int(round(L / grid_dt))
+    tk = jnp.arange(t_max + 1) * grid_dt
+    Fcs, Hcs = [], []
+    for d in dists:
+        F_raw = jnp.clip(d.cdf(tk), 0.0, 1.0)
+        atom = jnp.maximum(1.0 - F_raw[-1], 0.0)         # provider kill at L
+        Fcs.append(F_raw.at[-1].set(1.0).astype(jnp.float32))
+        H_raw = d.partial_expectation(jnp.zeros_like(tk), tk)
+        Hcs.append(H_raw.at[-1].add(atom * L).astype(jnp.float32))
+    V, K = _solve_tables_batch(jnp.stack(Fcs), jnp.stack(Hcs), grid_dt,
+                               restart_overhead, j_max=int(job_steps),
+                               t_max=t_max, delta_steps=int(delta_steps),
+                               n_sweeps=n_sweeps)
+    return BatchDPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
+                         delta_steps=int(delta_steps),
+                         restart_overhead=restart_overhead, horizon_idx=t_max)
 
 
 def extract_schedule(tables: DPTables, job_steps: int,
@@ -249,14 +439,25 @@ def no_checkpoint_policy_fn():
 def model_lifetimes_fn(dist):
     """lifetimes_fn adapter: numpy rng -> inverse-CDF samples from ``dist``,
     optionally conditioned on survival to ``min_age`` (F restricted to
-    [F(min_age), 1], with the residual >=F(L) mass preempted at L)."""
+    [F(min_age), 1], with the residual >=F(L) mass preempted at L).
+
+    Parameter leaves are normalized to jnp arrays up front so the compiled
+    bisection graph embeds array (not python-scalar) constants — exactly the
+    graph a slice of ``engine.draw_lifetime_pool_batch`` compiles, which is
+    what makes the batched pool reproduce this reference bit-for-bit under
+    x64 (python-float literals trigger scalar-constant algebra like
+    div-to-reciprocal that array constants do not).
+    """
+    dist = jax.tree_util.tree_map(
+        lambda l: jnp.asarray(l, jnp.result_type(float)), dist)
+
     def fn_capped(rng, n, min_age: float = 0.0):
+        from .. import engine  # local import, matching simulate_makespan
+
         u = rng.uniform(size=n)
         f_lo = float(dist.cdf(min_age)) if min_age > 0 else 0.0
         u = f_lo + u * (1.0 - f_lo)
         fl = float(dist.cdf(dist.L))
-        t = np.array(dist.icdf(jnp.minimum(jnp.asarray(u), fl * (1 - 1e-6))))
-        t[u >= fl] = float(dist.L)
-        return t
+        return engine.capped_icdf_draw(dist, u, fl, float(dist.L))
 
     return fn_capped

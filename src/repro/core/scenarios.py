@@ -35,13 +35,25 @@ from .policies import young_daly as yd
 
 __all__ = [
     "Scenario", "register", "get", "names", "default_grid",
-    "sweep_checkpointing", "sweep_service", "PHASE_CLOCKS",
+    "sweep_checkpointing", "sweep_service", "PHASE_CLOCKS", "ZONE_PARAMS",
 ]
 
 # Wall-clock launch hour per diurnal phase label.  "day" is the busiest
 # launch hour (the DiurnalConstrained peak), "night" the quietest, 12 h
 # away; "shoulder" sits at the zero crossing (= the static fit).
 PHASE_CLOCKS: Dict[str, float] = {"day": 20.0, "night": 8.0, "shoulder": 14.0}
+
+# Per-zone parameter regimes (CloudSim-Plus-style market diversity): zones
+# differ in capacity pressure, scaling the Eq. 1 initial-phase severity.
+# ``A_scale`` multiplies the type's fitted A (more pressure -> more
+# preemptions), ``tau1_scale`` the initial-phase time constant (more
+# pressure -> faster decay onto the young-VM wall).  The paper's fits are
+# from us-east1-b, which is therefore the identity zone.
+ZONE_PARAMS: Dict[str, Dict[str, float]] = {
+    "us-east1-b": dict(A_scale=1.0, tau1_scale=1.0),
+    "us-central1-a": dict(A_scale=1.08, tau1_scale=0.85),   # tighter market
+    "europe-west1-d": dict(A_scale=0.92, tau1_scale=1.20),  # slacker market
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +63,7 @@ class Scenario:
     name: str
     vm_type: str = "n1-highcpu-16"
     phase: str = "shoulder"            # diurnal label (see PHASE_CLOCKS)
+    zone: str = "us-east1-b"           # parameter regime (see ZONE_PARAMS)
     launch_clock: Optional[float] = None  # overrides the phase's clock
     dist_kwargs: Mapping = dataclasses.field(default_factory=dict)
     description: str = ""
@@ -63,22 +76,36 @@ class Scenario:
 
     def dist(self) -> dists.DiurnalConstrained:
         """The scenario's resolved lifetime model (full pytree contract, so
-        the DP solver, ReuseTable and lifetime pools work unchanged)."""
-        return dists.diurnal_for(self.vm_type, self.clock,
-                                 **dict(self.dist_kwargs))
+        the DP solver, ReuseTable and lifetime pools work unchanged).  The
+        zone's capacity-pressure scaling is applied to the type's base
+        Eq. 1 fit before any explicit ``dist_kwargs`` overrides."""
+        zone = ZONE_PARAMS[self.zone]
+        base = dists.VM_TYPE_PARAMS[self.vm_type]
+        kw = dict(A=base["A"] * zone["A_scale"],
+                  tau1=base["tau1"] * zone["tau1_scale"])
+        kw.update(self.dist_kwargs)
+        return dists.diurnal_for(self.vm_type, self.clock, **kw)
 
     def coords(self) -> dict:
         """Grid coordinates every sweep row is tagged with."""
         return dict(scenario=self.name, vm_type=self.vm_type,
-                    phase=self.phase, launch_clock=self.clock)
+                    phase=self.phase, zone=self.zone, launch_clock=self.clock)
 
 
 _REGISTRY: Dict[str, Scenario] = {}
 
 
-def register(scenario: Scenario, *, replace: bool = False) -> Scenario:
-    if not replace and scenario.name in _REGISTRY:
-        raise ValueError(f"scenario {scenario.name!r} already registered")
+def register(scenario: Scenario, *, overwrite: bool = False,
+             replace: Optional[bool] = None) -> Scenario:
+    """Add a scenario to the global registry.  Re-registering a taken name
+    raises unless ``overwrite=True`` — a silent clobber would invalidate
+    any grid that already resolved the old definition.  ``replace`` is the
+    deprecated pre-PR-3 spelling of the same flag."""
+    if replace is not None:
+        overwrite = replace
+    if not overwrite and scenario.name in _REGISTRY:
+        raise ValueError(f"scenario {scenario.name!r} already registered "
+                         f"(pass overwrite=True to replace it)")
     _REGISTRY[scenario.name] = scenario
     return scenario
 
@@ -92,17 +119,20 @@ def names() -> list:
 
 
 def default_grid(vm_types: Sequence[str] = ("n1-highcpu-16", "n1-highcpu-32"),
-                 phases: Sequence[str] = ("day", "night")) -> list:
-    """The (vm_type x diurnal phase) product as a list of scenarios (shared
-    with the registry; repeated calls return the same objects)."""
+                 phases: Sequence[str] = ("day", "night"),
+                 zones: Sequence[str] = ("us-east1-b", "us-central1-a"),
+                 ) -> list:
+    """The (zone x diurnal phase x vm_type) product as a list of scenarios
+    (shared with the registry; repeated calls return the same objects).
+    The default product is 2 x 2 x 2 = 8 scenarios."""
     out = []
-    for vm_type, phase in itertools.product(vm_types, phases):
-        name = f"{phase}/{vm_type}"
+    for zone, phase, vm_type in itertools.product(zones, phases, vm_types):
+        name = f"{zone}/{phase}/{vm_type}"
         if name not in _REGISTRY:
             register(Scenario(
-                name=name, vm_type=vm_type, phase=phase,
-                description=f"{vm_type} launched at the {phase} clock "
-                            f"({PHASE_CLOCKS[phase]:.0f}h)"))
+                name=name, vm_type=vm_type, phase=phase, zone=zone,
+                description=f"{vm_type} in {zone} launched at the {phase} "
+                            f"clock ({PHASE_CLOCKS[phase]:.0f}h)"))
         out.append(_REGISTRY[name])
     return out
 
@@ -137,55 +167,130 @@ def _policy_tables(policy: str, tables: ckpt.DPTables, job_steps: int,
                      f"choose from {_CKPT_POLICY_BUILDERS}")
 
 
+def _policy_tables_batch(policy: str, batch: "ckpt.BatchDPTables",
+                         job_steps: int, grid_dt: float, delta_steps: int,
+                         dist_list):
+    """Scenario-stacked policy tables for the batched executor: (S, ...) for
+    per-scenario policies, a plain 2-D table for scenario-independent ones
+    (the executor broadcasts it)."""
+    if policy == "dp":
+        return np.asarray(batch.K, np.int32)
+    if policy == "young_daly":
+        # per scenario, as in the serial path: the YD interval implied by
+        # THIS scenario's initial failure rate
+        tabs = []
+        for dist in dist_list:
+            tau = float(yd.interval(delta_steps * grid_dt,
+                                    yd.mttf_from_initial_rate(dist)))
+            tau_steps = max(1, int(round(tau / grid_dt)))
+            tabs.append(engine.young_daly_policy_table(tau_steps, job_steps))
+        return np.stack(tabs)
+    if policy == "none":
+        return engine.no_checkpoint_policy_table(job_steps)   # shared 2-D
+    raise ValueError(f"unknown checkpointing policy {policy!r}; "
+                     f"choose from {_CKPT_POLICY_BUILDERS}")
+
+
+def _ckpt_row(sc, policy, seed, mk, finished, *, n_trials, job_steps,
+              p_fail_fresh, expected_makespan_dp):
+    ok = mk[finished]
+    return dict(
+        sc.coords(), policy=policy, seed=seed,
+        n_trials=n_trials, job_steps=job_steps,
+        p_fail_fresh=p_fail_fresh,
+        expected_makespan_dp=expected_makespan_dp,
+        makespan_mean=float(ok.mean()) if ok.size else float("nan"),
+        makespan_p50=float(np.median(ok)) if ok.size else float("nan"),
+        makespan_p95=float(np.percentile(ok, 95)) if ok.size else float("nan"),
+        unfinished_frac=float(1.0 - finished.mean()))
+
+
 def sweep_checkpointing(scenarios: Iterable, *,
                         policies: Sequence[str] = ("dp", "young_daly", "none"),
                         seeds: Sequence[int] = (0,), job_steps: int = 300,
                         n_trials: int = 1000, grid_dt: float = 1.0 / 60.0,
                         delta_steps: int = 1, max_restarts: int = 64,
                         restart_overhead: float = 0.0,
-                        n_sweeps: int = 3) -> list:
+                        n_sweeps: int = 3, mode: str = "batched") -> list:
     """Expand (scenario x policy x seed) over the vectorized executor.
 
-    Per scenario: ONE DP solve, one table per policy and one pre-drawn
-    device lifetime pool per seed, shared by every policy — so the grid cost
-    is dominated by the batched kernel runs, not per-cell setup.  Returns a
-    list of dict rows (one per cell) with makespan statistics and the
-    unfinished-trial fraction (truncated trials are NaN-flagged by the
-    engine, never silently averaged in).
+    ``mode="batched"`` (default) treats the scenario dimension as a leading
+    batch axis end-to-end: ONE ``checkpointing.solve_batch`` call solves
+    every scenario's DP together, ONE ``engine.draw_lifetime_pool_batch``
+    call per seed draws all scenarios' device pools, and each (seed, policy)
+    cell group runs as ONE scenario-batched executor call.  ``mode="serial"``
+    is the per-scenario path this replaced (one solve + one numpy pool
+    round-trip per scenario), retained as the reference and timed against
+    the batched path by ``benchmarks/scenario_sweep.py``.
+
+    Row order and schema are identical in both modes; per scenario the
+    solver tables are bit-exact across modes, so rows differ only by the
+    pool's float32 inverse-CDF rounding (well below Monte-Carlo noise).
+    Truncated trials are NaN-flagged by the engine, never silently
+    averaged in.
     """
+    if mode not in ("batched", "serial"):
+        raise ValueError(f"mode must be 'batched' or 'serial', got {mode!r}")
+    scs = _resolve(scenarios)
     rows = []
-    for sc in _resolve(scenarios):
-        dist = sc.dist()
-        tables = ckpt.solve(dist, job_steps, grid_dt=grid_dt,
-                            delta_steps=delta_steps, n_sweeps=n_sweeps,
-                            restart_overhead=restart_overhead)
-        ptables = {p: _policy_tables(p, tables, job_steps, grid_dt,
-                                     delta_steps, dist)
-                   for p in policies}
-        lifetimes_fn = ckpt.model_lifetimes_fn(dist)
-        # single-attempt failure probability of the whole job on a fresh VM —
-        # the scenario's Obs. 5 "how gentle is this launch phase" scalar
-        p_fail_fresh = float(dist.cdf(job_steps * grid_dt))
+    if mode == "serial":
+        for sc in scs:
+            dist = sc.dist()
+            tables = ckpt.solve(dist, job_steps, grid_dt=grid_dt,
+                                delta_steps=delta_steps, n_sweeps=n_sweeps,
+                                restart_overhead=restart_overhead)
+            ptables = {p: _policy_tables(p, tables, job_steps, grid_dt,
+                                         delta_steps, dist)
+                       for p in policies}
+            lifetimes_fn = ckpt.model_lifetimes_fn(dist)
+            # single-attempt failure probability of the whole job on a fresh
+            # VM — the scenario's Obs. 5 "how gentle is this phase" scalar
+            p_fail_fresh = float(dist.cdf(job_steps * grid_dt))
+            for seed in seeds:
+                first, pool = engine.draw_lifetime_pool(
+                    lifetimes_fn, n_trials, max_restarts=max_restarts,
+                    seed=seed)
+                for policy in policies:
+                    mk, finished = engine.simulate_makespan_batch(
+                        ptables[policy], job_steps, first=first, pool=pool,
+                        grid_dt=grid_dt, delta_steps=delta_steps,
+                        restart_overhead=restart_overhead,
+                        max_restarts=max_restarts, unfinished="nan",
+                        return_finished=True)
+                    rows.append(_ckpt_row(
+                        sc, policy, seed, mk, finished, n_trials=n_trials,
+                        job_steps=job_steps, p_fail_fresh=p_fail_fresh,
+                        expected_makespan_dp=tables.expected_makespan(job_steps)))
+        return rows
+
+    dist_list = [sc.dist() for sc in scs]
+    batch = ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt,
+                             delta_steps=delta_steps, n_sweeps=n_sweeps,
+                             restart_overhead=restart_overhead)
+    ptables = {p: _policy_tables_batch(p, batch, job_steps, grid_dt,
+                                       delta_steps, dist_list)
+               for p in policies}
+    p_fail_fresh = [float(d.cdf(job_steps * grid_dt)) for d in dist_list]
+    cells = {}
+    for seed in seeds:
+        first, pool = engine.draw_lifetime_pool_batch(
+            dist_list, n_trials, max_restarts=max_restarts, seed=seed)
+        for policy in policies:
+            mk, finished = engine.simulate_makespan_batch(
+                ptables[policy], job_steps, first=first, pool=pool,
+                grid_dt=grid_dt, delta_steps=delta_steps,
+                restart_overhead=restart_overhead,
+                max_restarts=max_restarts, unfinished="nan",
+                return_finished=True)
+            cells[seed, policy] = (mk, finished)
+    for s, sc in enumerate(scs):                 # serial-compatible row order
         for seed in seeds:
-            first, pool = engine.draw_lifetime_pool(
-                lifetimes_fn, n_trials, max_restarts=max_restarts, seed=seed)
             for policy in policies:
-                mk, finished = engine.simulate_makespan_batch(
-                    ptables[policy], job_steps, first=first, pool=pool,
-                    grid_dt=grid_dt, delta_steps=delta_steps,
-                    restart_overhead=restart_overhead,
-                    max_restarts=max_restarts, unfinished="nan",
-                    return_finished=True)
-                ok = mk[finished]
-                rows.append(dict(
-                    sc.coords(), policy=policy, seed=seed,
-                    n_trials=n_trials, job_steps=job_steps,
-                    p_fail_fresh=p_fail_fresh,
-                    expected_makespan_dp=tables.expected_makespan(job_steps),
-                    makespan_mean=float(ok.mean()) if ok.size else float("nan"),
-                    makespan_p50=float(np.median(ok)) if ok.size else float("nan"),
-                    makespan_p95=float(np.percentile(ok, 95)) if ok.size else float("nan"),
-                    unfinished_frac=float(1.0 - finished.mean())))
+                mk, finished = cells[seed, policy]
+                rows.append(_ckpt_row(
+                    sc, policy, seed, mk[s], finished[s], n_trials=n_trials,
+                    job_steps=job_steps, p_fail_fresh=p_fail_fresh[s],
+                    expected_makespan_dp=batch.expected_makespan(s, job_steps)))
     return rows
 
 
@@ -199,19 +304,31 @@ def sweep_service(scenarios: Iterable, *,
                   seeds: Sequence[int] = (0,), n_jobs: int = 40,
                   job_hours: float = 2.0, jitter: float = 0.1, **kw) -> list:
     """Expand (scenario x policy x cluster_size x seed) over the batch
-    service.  Each scenario's cell group goes through ``service.
-    run_bag_grid``, which evaluates the model policy's reuse decisions in a
-    single jitted ReuseTable grid call shared across all of that scenario's
-    cells.  Returns flat dict rows with the headline service metrics.
+    service.  The model policy's reuse grids for ALL scenarios are built by
+    one vmapped :meth:`engine.ReuseTable.batch` call up front (the bag
+    lengths depend only on the seeds, so every scenario shares one
+    remaining-work axis); each scenario's cell group then goes through
+    ``service.run_bag_grid`` with its precomputed table, keeping the event
+    loops numpy-only.  Returns flat dict rows with the headline service
+    metrics.
     """
+    scs = _resolve(scenarios)
+    tables = [None] * len(scs)
+    if "model" in policies and kw.get("vectorized_reuse", True):
+        dist_list = [sc.dist() for sc in scs]
+        tables = engine.ReuseTable.batch(
+            dist_list,
+            service_mod.grid_reuse_values(dist_list[0], seeds=tuple(seeds),
+                                          n_jobs=n_jobs, job_hours=job_hours,
+                                          jitter=jitter, **kw))
     rows = []
-    for sc in _resolve(scenarios):
+    for sc, table in zip(scs, tables):
         dist = sc.dist()
         grid = service_mod.run_bag_grid(
             vm_types=(sc.vm_type,), policies=tuple(policies),
             cluster_sizes=tuple(cluster_sizes), seeds=tuple(seeds),
             n_jobs=n_jobs, job_hours=job_hours, jitter=jitter,
-            dist_for=lambda _vm_type: dist, **kw)
+            dist_for=lambda _vm_type: dist, reuse_table=table, **kw)
         for cell in grid:
             r = cell["result"]
             rows.append(dict(

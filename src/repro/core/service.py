@@ -331,6 +331,19 @@ def _bag_lengths(n_jobs: int, job_hours: float, jitter: float, seed: int):
     return job_hours * (1.0 + jitter * (rng.uniform(size=n_jobs) - 0.5))
 
 
+def grid_reuse_values(dist, *, seeds, n_jobs: int, job_hours: float,
+                      jitter: float, **kw) -> np.ndarray:
+    """Every remaining-work value a ``run_bag_grid`` call with these
+    parameters can present to the reuse policy (the union of all seeds'
+    bag lengths, expanded for checkpoint banking).  Single source of truth
+    for both ``run_bag_grid``'s own table and callers that precompute
+    tables for it (``scenarios.sweep_service``)."""
+    lengths = np.concatenate([_bag_lengths(n_jobs, job_hours, jitter, s)
+                              for s in seeds])
+    probe = BatchService(dist, **kw)
+    return probe._candidate_rem_values(lengths)
+
+
 def run_bag(dist, *, n_jobs: int = 100, job_hours: float = 2.0,
             jitter: float = 0.1, cluster_size: int = 32,
             vm_type: str = "n1-highcpu-32", policy: str = "model",
@@ -345,6 +358,7 @@ def run_bag(dist, *, n_jobs: int = 100, job_hours: float = 2.0,
 def run_bag_grid(*, vm_types=("n1-highcpu-32",), policies=("model",),
                  cluster_sizes=(32,), seeds=(0,), n_jobs: int = 100,
                  job_hours: float = 2.0, jitter: float = 0.1, dist_for=None,
+                 reuse_table: Optional[engine.ReuseTable] = None,
                  **kw) -> list:
     """Sweep ``run_bag`` over the (policy x vm_type x cluster_size x seed)
     grid in one call, sharing the vectorized per-distribution work.
@@ -352,22 +366,30 @@ def run_bag_grid(*, vm_types=("n1-highcpu-32",), policies=("model",),
     The model policy's reuse decisions for ALL bags of a VM type are
     evaluated in a single jitted grid call (one :class:`engine.ReuseTable`
     over the union of every seed's job lengths), so the per-cell event loops
-    run entirely in numpy.  Returns a list of dict rows with the grid
-    coordinates and the :class:`ServiceResult`.
+    run entirely in numpy.  A caller that already holds such a table (e.g.
+    ``scenarios.sweep_service``, which builds every scenario's grid in one
+    vmapped ``ReuseTable.batch`` call) can pass it as ``reuse_table``; it is
+    trusted to cover the grid's remaining-work values and must come from the
+    same distribution ``dist_for`` resolves (single-vm_type grids only).
+    Returns a list of dict rows with the grid coordinates and the
+    :class:`ServiceResult`.
     """
     dist_for = dist_for or dists.constrained_for
     policies, cluster_sizes = tuple(policies), tuple(cluster_sizes)
     seeds = tuple(seeds)
+    if reuse_table is not None and len(tuple(vm_types)) != 1:
+        raise ValueError("a shared reuse_table implies a single-distribution "
+                         "grid; pass one vm_type")
     lengths = {s: _bag_lengths(n_jobs, job_hours, jitter, s) for s in seeds}
     rows = []
     for vm_type in vm_types:
         dist = dist_for(vm_type)
-        table = None
-        if "model" in policies and kw.get("vectorized_reuse", True):
-            probe = BatchService(dist, vm_type=vm_type, **kw)
-            all_rem = probe._candidate_rem_values(
-                np.concatenate(list(lengths.values())))
-            table = engine.ReuseTable(dist, all_rem)
+        table = reuse_table
+        if table is None and "model" in policies \
+                and kw.get("vectorized_reuse", True):
+            table = engine.ReuseTable(dist, grid_reuse_values(
+                dist, seeds=seeds, n_jobs=n_jobs, job_hours=job_hours,
+                jitter=jitter, vm_type=vm_type, **kw))
         for policy, cs, seed in itertools.product(policies, cluster_sizes,
                                                   seeds):
             svc = BatchService(

@@ -1,0 +1,244 @@
+"""Batched scenario axis: distribution stacking, the batched DP solver, the
+device lifetime pools, the scenario-batched executor and ReuseTable.batch.
+
+The core contracts under test:
+
+  * ``checkpointing.solve_batch`` matches the per-scenario reference
+    ``checkpointing.solve`` table-for-table (bit-exact V and K) on the full
+    default scenario grid — the batched kernel restructures the loop but
+    keeps the reference expression tree;
+  * ``engine.draw_lifetime_pool_batch`` slices reproduce the numpy-reference
+    ``engine.draw_lifetime_pool`` under a shared seed (bit-exact under x64,
+    float32-close otherwise);
+  * a scenario-batched ``engine.simulate_makespan_batch`` keeps the float64
+    bit-exactness contract per scenario slice on a shared pool.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core import distributions as D
+from repro.core import engine as E
+from repro.core import scenarios as SC
+from repro.core.policies import checkpointing as C
+
+GRID = 1.0 / 60.0
+
+
+@pytest.fixture(scope="module")
+def grid_dists():
+    return [sc.dist() for sc in SC.default_grid()]
+
+
+# ---------------------------------------------------------------------------
+# distribution stacking
+# ---------------------------------------------------------------------------
+
+def test_stack_leading_axis_and_vmap(grid_dists):
+    stacked = D.stack(grid_dists)
+    S = len(grid_dists)
+    assert type(stacked) is type(grid_dists[0])
+    for leaf in jax.tree_util.tree_leaves(stacked):
+        assert leaf.shape[:1] == (S,)
+    t = jnp.linspace(0.0, 24.0, 33)
+    batched = jax.vmap(lambda d: d.cdf(t))(stacked)
+    assert batched.shape == (S, 33)
+    for s, d in enumerate(grid_dists):
+        np.testing.assert_allclose(np.asarray(batched[s]),
+                                   np.asarray(d.cdf(t)), rtol=1e-6,
+                                   atol=1e-7)
+
+
+def test_stack_unstack_roundtrip(grid_dists):
+    back = D.unstack(D.stack(grid_dists))
+    assert len(back) == len(grid_dists)
+    for orig, d in zip(grid_dists, back):
+        assert float(d.tau1) == pytest.approx(float(orig.tau1))
+        assert float(d.launch_clock) == pytest.approx(float(orig.launch_clock))
+
+
+def test_stack_rejects_mixed_families_and_empty():
+    with pytest.raises(TypeError):
+        D.stack([D.Constrained(), D.Exponential()])
+    with pytest.raises(ValueError):
+        D.stack([])
+    with pytest.raises(ValueError):
+        D.unstack(D.Constrained())
+
+
+# ---------------------------------------------------------------------------
+# batched DP solver
+# ---------------------------------------------------------------------------
+
+def test_solve_batch_matches_solve_on_default_grid(grid_dists):
+    """Table-for-table equivalence on the FULL default grid: every scenario
+    slice of solve_batch must be bit-identical to the per-scenario solve."""
+    job = 72
+    batch = C.solve_batch(grid_dists, job, grid_dt=GRID)
+    assert batch.V.shape == (len(grid_dists), job + 1, batch.horizon_idx + 1)
+    assert len(batch) == len(grid_dists)
+    for s, d in enumerate(grid_dists):
+        ref = C.solve(d, job, grid_dt=GRID)
+        assert np.array_equal(ref.V, batch.V[s]), f"V differs at scenario {s}"
+        assert np.array_equal(ref.K, batch.K[s]), f"K differs at scenario {s}"
+        view = batch.tables(s)
+        assert np.array_equal(view.K, ref.K)
+        assert view.expected_makespan(job) == ref.expected_makespan(job)
+        assert batch.expected_makespan(s, job) == ref.expected_makespan(job)
+
+
+def test_solve_batch_nondefault_workload():
+    """delta_steps > 1, restart overhead and a tiny job exercise the
+    final-column patch and the segment split edge cases."""
+    ds = [D.constrained_for("n1-highcpu-16"), D.constrained_for("n1-highcpu-32")]
+    for job, delta, ro in [(2, 1, 0.0), (25, 3, 0.1)]:
+        batch = C.solve_batch(ds, job, grid_dt=1.0 / 20.0, delta_steps=delta,
+                              restart_overhead=ro)
+        for s, d in enumerate(ds):
+            ref = C.solve(d, job, grid_dt=1.0 / 20.0, delta_steps=delta,
+                          restart_overhead=ro)
+            assert np.array_equal(ref.V, batch.V[s]), (job, delta, s)
+            assert np.array_equal(ref.K, batch.K[s]), (job, delta, s)
+
+
+def test_solve_batch_input_validation():
+    with pytest.raises(ValueError):
+        C.solve_batch([], 10)
+    with pytest.raises(ValueError, match="shared deadline"):
+        C.solve_batch([D.Constrained(), D.Constrained(L=12.0)], 10)
+
+
+# ---------------------------------------------------------------------------
+# batched lifetime pools
+# ---------------------------------------------------------------------------
+
+def test_pool_batch_close_to_reference(grid_dists):
+    """Default float32 mode: batched pool slices match the float64 numpy
+    reference to float32 precision for every scenario and seed."""
+    n, mr = 200, 16
+    for seed in (0, 3):
+        first_b, pool_b = E.draw_lifetime_pool_batch(
+            grid_dists, n, max_restarts=mr, seed=seed)
+        assert first_b.shape == (len(grid_dists), n)
+        assert pool_b.shape == (len(grid_dists), n, mr + 2)
+        for s, d in enumerate(grid_dists):
+            first, pool = E.draw_lifetime_pool(
+                C.model_lifetimes_fn(d), n, max_restarts=mr, seed=seed)
+            np.testing.assert_allclose(pool_b[s], pool, rtol=2e-5, atol=2e-4)
+            np.testing.assert_allclose(first_b[s], first, rtol=2e-5,
+                                       atol=2e-4)
+
+
+@pytest.mark.slow
+def test_pool_batch_bitexact_x64(grid_dists):
+    """Under x64 a batched pool slice reproduces the numpy-reference pool
+    bit-for-bit (shared seed, shared draw order), including the conditioned
+    first draw of an aged VM."""
+    n, mr = 200, 16
+    with enable_x64():
+        for start_age in (0.0, 6.0):
+            first_b, pool_b = E.draw_lifetime_pool_batch(
+                grid_dists, n, max_restarts=mr, seed=11, start_age=start_age)
+            for s, d in enumerate(grid_dists):
+                first, pool = E.draw_lifetime_pool(
+                    C.model_lifetimes_fn(d), n, max_restarts=mr, seed=11,
+                    start_age=start_age)
+                assert np.array_equal(pool, pool_b[s]), (start_age, s)
+                assert np.array_equal(first, first_b[s]), (start_age, s)
+
+
+# ---------------------------------------------------------------------------
+# scenario-batched executor
+# ---------------------------------------------------------------------------
+
+def test_batched_executor_bitexact_per_slice(grid_dists):
+    """Shared pool, float64: every scenario slice of the batched executor is
+    bit-identical to the unbatched kernel, for per-scenario and shared
+    policy tables alike."""
+    ds = grid_dists[:3]
+    job = 60
+    batch = C.solve_batch(ds, job, grid_dt=GRID)
+    tables3 = np.asarray(batch.K, np.int32)             # (S, j+1, t+1)
+    shared = E.no_checkpoint_policy_table(job)          # 2-D, broadcast
+    first_b, pool_b = E.draw_lifetime_pool_batch(ds, 150, max_restarts=16,
+                                                 seed=5)
+    with enable_x64():
+        for table_b, table_of in [(tables3, lambda s: tables3[s]),
+                                  (shared, lambda s: shared)]:
+            mk_b = E.simulate_makespan_batch(
+                table_b, job, first=first_b, pool=pool_b, grid_dt=GRID,
+                max_restarts=16, unfinished="partial")
+            assert mk_b.shape == (len(ds), 150)
+            for s in range(len(ds)):
+                mk = E.simulate_makespan_batch(
+                    table_of(s), job, first=first_b[s], pool=pool_b[s],
+                    grid_dt=GRID, max_restarts=16, unfinished="partial")
+                assert np.array_equal(mk, mk_b[s]), s
+
+
+def test_batched_executor_finished_mask_and_errors():
+    job = 60
+    table = E.no_checkpoint_policy_table(job)
+    # scenario 0 finishes, scenario 1 never does (VMs die at 0.5 h)
+    first = np.stack([np.full(4, 24.0), np.full(4, 0.5)])
+    pool = np.stack([np.full((4, 18), 24.0), np.full((4, 18), 0.5)])
+    mk, fin = E.simulate_makespan_batch(table, job, first=first, pool=pool,
+                                        grid_dt=GRID, max_restarts=16,
+                                        return_finished=True)
+    assert fin.shape == (2, 4)
+    assert fin[0].all() and not fin[1].any()
+    assert np.isnan(mk[1]).all()
+    np.testing.assert_allclose(mk[0], 1.0, rtol=1e-6)
+    with pytest.raises(ValueError, match="scenario-batched pool"):
+        E.simulate_makespan_batch(np.stack([table, table]), job,
+                                  first=first[0], pool=pool[0], grid_dt=GRID)
+    with pytest.raises(ValueError, match="needs first of shape"):
+        E.simulate_makespan_batch(table, job, first=first[0], pool=pool,
+                                  grid_dt=GRID)
+
+
+# ---------------------------------------------------------------------------
+# batched ReuseTable
+# ---------------------------------------------------------------------------
+
+def test_reuse_table_batch_matches_per_scenario(grid_dists):
+    T_vals = np.array([0.5, 1.0, 2.0, 4.0])
+    batched = E.ReuseTable.batch(grid_dists, T_vals, n_age=97)
+    assert len(batched) == len(grid_dists)
+    for d, bt in zip(grid_dists, batched):
+        ref = E.ReuseTable(d, T_vals, n_age=97)
+        assert bt.L == ref.L and bt.n_age == ref.n_age
+        assert np.array_equal(bt.T_values, ref.T_values)
+        # boolean decisions may flip only where Eq. 9 and Eq. 10 tie to
+        # within float rounding; on this grid they must agree everywhere
+        assert np.array_equal(bt.table, ref.table)
+
+
+def test_reuse_table_batch_requires_shared_L():
+    with pytest.raises(ValueError, match="shared L"):
+        E.ReuseTable.batch([D.Constrained(), D.Constrained(L=12.0)],
+                           np.array([1.0]))
+
+
+# ---------------------------------------------------------------------------
+# bench-artifact stamping (benchmarks.common satellite)
+# ---------------------------------------------------------------------------
+
+def test_write_bench_json_stamps_commit_and_schema(tmp_path, monkeypatch):
+    import json
+
+    from benchmarks import common
+
+    monkeypatch.setattr(common, "REPO_ROOT", str(tmp_path))
+    path = common.write_bench_json("BENCH_stamp_test.json",
+                                   {"schema": 9, "payload": [1, 2]},
+                                   emit_as="test/json")
+    data = json.loads(open(path).read())
+    assert data["schema"] == 9 and data["payload"] == [1, 2]
+    assert data["bench_schema_version"] == common.BENCH_SCHEMA_VERSION
+    commit = data["git_commit"]
+    assert isinstance(commit, str) and commit
+    # stamped commit matches the repo's HEAD when running inside the repo
+    assert commit == common.git_commit()

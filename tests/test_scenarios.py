@@ -130,11 +130,48 @@ def test_registry_roundtrip_and_duplicate_guard():
     grid = SC.default_grid(vm_types=("n1-highcpu-16",), phases=("day",))
     assert SC.get(grid[0].name) is grid[0]
     assert grid[0].name in SC.names()
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="already registered"):
         SC.register(SC.Scenario(name=grid[0].name))
     # repeated default_grid calls reuse the registered scenarios
     assert SC.default_grid(vm_types=("n1-highcpu-16",),
                            phases=("day",))[0] is grid[0]
+
+
+def test_register_overwrite():
+    """Re-registering a taken name must be an explicit decision: it raises
+    by default (a silent clobber would invalidate resolved grids) and
+    replaces the scenario only with overwrite=True."""
+    name = "overwrite-regression"
+    first = SC.register(SC.Scenario(name=name, phase="day"))
+    with pytest.raises(ValueError, match="overwrite=True"):
+        SC.register(SC.Scenario(name=name, phase="night"))
+    assert SC.get(name) is first, "failed registration must not clobber"
+    second = SC.register(SC.Scenario(name=name, phase="night"),
+                         overwrite=True)
+    assert SC.get(name) is second
+    assert SC.get(name).phase == "night"
+    # the deprecated pre-PR-3 spelling keeps working
+    third = SC.register(SC.Scenario(name=name, phase="day"), replace=True)
+    assert SC.get(name) is third
+
+
+def test_default_grid_zone_dimension():
+    """The grown default grid is the (zone x phase x vm_type) product, and
+    zone scaling orders the initial-phase severity: a tighter market
+    (us-central1-a) preempts young VMs more than the identity zone."""
+    grid = SC.default_grid()
+    assert len(grid) == 8
+    assert {sc.zone for sc in grid} == {"us-east1-b", "us-central1-a"}
+    coords = {(sc.zone, sc.phase, sc.vm_type) for sc in grid}
+    assert len(coords) == 8
+    base = SC.get("us-east1-b/day/n1-highcpu-16").dist()
+    tight = SC.get("us-central1-a/day/n1-highcpu-16").dist()
+    assert float(tight.cdf(1.0)) > float(base.cdf(1.0))
+    # the identity zone reproduces the pre-zone scenario definition
+    legacy = D.diurnal_for("n1-highcpu-16", SC.PHASE_CLOCKS["day"])
+    t = jnp.linspace(0.0, 24.0, 49)
+    np.testing.assert_allclose(np.asarray(base.cdf(t)),
+                               np.asarray(legacy.cdf(t)), rtol=1e-6)
 
 
 def test_sweep_checkpointing_grid_shape_and_determinism():
@@ -153,11 +190,36 @@ def test_sweep_checkpointing_grid_shape_and_determinism():
         assert a == b
 
 
+def test_sweep_checkpointing_batched_matches_serial():
+    """The batched scenario axis must reproduce the serial per-scenario
+    sweep: identical row order/coords, bit-identical DP expectations and
+    fresh-VM failure probabilities, and makespan statistics within the
+    pool's float32 inverse-CDF rounding (far below Monte-Carlo noise)."""
+    grid = SC.default_grid(vm_types=("n1-highcpu-16", "n1-highcpu-32"),
+                           phases=("day", "night"), zones=("us-east1-b",))
+    kw = dict(policies=("dp", "young_daly", "none"), seeds=(0, 1),
+              job_steps=60, n_trials=80)
+    batched = SC.sweep_checkpointing(grid, mode="batched", **kw)
+    serial = SC.sweep_checkpointing(grid, mode="serial", **kw)
+    assert len(batched) == len(serial) == len(grid) * 3 * 2
+    for b, s in zip(batched, serial):
+        assert (b["scenario"], b["policy"], b["seed"]) == \
+            (s["scenario"], s["policy"], s["seed"])
+        assert b["expected_makespan_dp"] == s["expected_makespan_dp"]
+        assert b["p_fail_fresh"] == s["p_fail_fresh"]
+        assert b["unfinished_frac"] == s["unfinished_frac"] == 0.0
+        np.testing.assert_allclose(b["makespan_mean"], s["makespan_mean"],
+                                   rtol=5e-3)
+    with pytest.raises(ValueError, match="mode"):
+        SC.sweep_checkpointing(grid, mode="bogus", **kw)
+
+
 def test_sweep_service_grid_shape():
-    grid = SC.default_grid(vm_types=("n1-highcpu-32",), phases=("day", "night"))
+    grid = SC.default_grid(vm_types=("n1-highcpu-32",), phases=("day", "night"),
+                           zones=("us-east1-b",))
     rows = SC.sweep_service(grid, policies=("model", "memoryless"),
                             cluster_sizes=(8,), seeds=(0,), n_jobs=15)
-    assert len(rows) == 2 * 2 * 1 * 1
+    assert len(rows) == len(grid) * 2 * 1 * 1 == 4
     for r in rows:
         assert r["cost"] > 0 and r["cost_reduction"] > 1.0
         assert 0.0 <= r["job_failure_rate"] <= r["n_job_failures"]
