@@ -1,4 +1,9 @@
-"""Shared benchmark utilities: CSV emission, timing + BENCH-JSON output."""
+"""Shared benchmark utilities: CSV emission, timing + BENCH-JSON output.
+
+The ``BENCH_*.json`` artifacts written through :func:`write_bench_json` are
+the cross-PR perf-trajectory contract; their field-by-field layout, schema
+versioning and diffing workflow are documented in ``docs/bench_schemas.md``.
+"""
 from __future__ import annotations
 
 import functools
@@ -45,7 +50,8 @@ def write_bench_json(filename: str, payload: dict, *, emit_as: str):
 
     Every artifact is stamped with the producing git commit and the
     envelope schema version, so the perf trajectory stays diffable across
-    PRs without guessing which commit wrote which numbers.
+    PRs without guessing which commit wrote which numbers.  See
+    ``docs/bench_schemas.md`` for every artifact's field reference.
     """
     payload = dict(payload)
     payload["git_commit"] = git_commit()

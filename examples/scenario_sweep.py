@@ -1,31 +1,42 @@
 """Diurnal scenario sweep (paper Obs. 5): how much gentler are night
 launches, and does the advantage survive both evaluation paths?
 
-The default grid now spans (zone x phase x vm_type) and the sweep runs the
-batched scenario axis end-to-end: one DP solve, one device lifetime pool
-and one scenario-batched executor call cover the whole grid (see
-`scenarios.sweep_checkpointing(mode=...)`).
+The default grid spans (zone x phase x vm_type) and the sweep runs the
+one-kernel fold end-to-end: one DP solve, one device lifetime pool and ONE
+executor dispatch cover the whole (scenario x policy x seed) grid (see
+`scenarios.sweep_checkpointing(mode=...)` and the README's leading-axis
+worked example).
 
-Run: PYTHONPATH=src python examples/scenario_sweep.py
+Run: PYTHONPATH=src python examples/scenario_sweep.py [--quick]
+
+``--quick`` shrinks the trial counts so the example (and the CI smoke that
+executes it) finishes in seconds; the printed structure is identical.
 """
+import sys
+
 import numpy as np
 
 from repro.core import scenarios
+
+QUICK = "--quick" in sys.argv
+n_trials = 120 if QUICK else 500
+n_jobs = 10 if QUICK else 30
 
 grid = scenarios.default_grid(vm_types=("n1-highcpu-16", "n1-highcpu-32"),
                               phases=("day", "night"))
 print("scenarios:", ", ".join(s.name for s in grid))
 
-print("\ncheckpointing executor (5h job, DP vs no-checkpoint, 500 trials):")
+print(f"\ncheckpointing executor (5h job, DP vs no-checkpoint, "
+      f"{n_trials} trials, one kernel dispatch):")
 rows = scenarios.sweep_checkpointing(grid, policies=("dp", "none"),
-                                     job_steps=300, n_trials=500)
+                                     job_steps=300, n_trials=n_trials)
 for r in rows:
     print(f"  {r['scenario']:34s} {r['policy']:5s}: "
           f"mean {r['makespan_mean']:5.2f}h  p95 {r['makespan_p95']:5.2f}h")
 
-print("\nbatch service (30 x 2h jobs, 8 VMs):")
+print(f"\nbatch service ({n_jobs} x 2h jobs, 8 VMs):")
 for r in scenarios.sweep_service(grid, policies=("model",),
-                                 cluster_sizes=(8,), n_jobs=30):
+                                 cluster_sizes=(8,), n_jobs=n_jobs):
     print(f"  {r['scenario']:34s}: makespan {r['makespan']:5.1f}h  "
           f"failures {r['n_job_failures']:2d}  "
           f"{r['cost_reduction']:.2f}x cheaper than on-demand")

@@ -27,30 +27,62 @@ until the next checkpoint given ``j`` remaining steps and VM age index
 Age-independent policies use a ``(j_max+1, 1)`` table — the kernel clips the
 age index into the table's second dimension.
 
-Exactness contract: with a float64 pool and x64 enabled (e.g. under
-``jax.experimental.enable_x64``), the kernel performs the *same* IEEE
-operations in the same order as the Python reference, so makespans match
-bit-for-bit.  In default float32 mode results agree to ~1e-6 relative, which
-is far below Monte-Carlo noise.
+Bit-exactness contract (the PR-1 equivalence discipline)
+---------------------------------------------------------
+Every batched kernel in this module has a retained reference implementation
+it must reproduce, and the dtype under which the match is *bit-exact* is part
+of the contract:
 
-Leading-axis convention (scenario batching): every batched entry point
-treats an optional leading axis as the *scenario* axis ``S``, threaded
-end-to-end from the distribution layer up:
+  * :func:`simulate_makespan_batch` vs the per-trial Python loop
+    ``checkpointing.simulate_makespan`` — on a shared pre-drawn pool with x64
+    enabled (``jax.experimental.enable_x64``), makespans match bit-for-bit:
+    the kernel works in integer grid-step units with the only float
+    accumulation (lost partial segments) ordered exactly as the reference,
+    so XLA cannot contract a multiply-add into an FMA.  In default float32
+    mode results agree to ~1e-6 relative, far below Monte-Carlo noise.
+  * Batched (leading-axis) kernels vs their own unbatched form — per slice,
+    same dtype rule: the ``lax.while_loop`` batching rule freezes finished
+    lanes with selects, so each lane performs the reference IEEE operations.
+  * :func:`draw_lifetime_pool_batch` vs the numpy-reference
+    :func:`draw_lifetime_pool` — per (entry, seed) slice, bit-exact under
+    x64 (both paths share :func:`capped_icdf_draw` and compile the same
+    array-constant bisection graph), float32-close (~1e-6) otherwise.
+
+``tests/test_sim_engine.py`` and ``tests/test_batched.py`` enforce all
+three; any kernel restructuring must keep them green.
+
+Leading-axis convention (batching scenarios — or whole sweep grids)
+-------------------------------------------------------------------
+Every batched entry point treats an optional leading axis as a *batch of
+independent cells*.  In the simplest use the axis is the scenario axis
+``S``, threaded end-to-end from the distribution layer up; since PR 4 the
+same axis folds the full (scenario x policy x seed) sweep grid as a
+flattened cell axis ``B = S*P*R`` — the executor does not care what the
+axis means, only that lane ``b`` carries that cell's table, first lifetime
+and pool:
 
   * ``distributions.stack(dists)`` stacks a scenario list into one pytree
     whose parameter leaves carry a leading ``(S,)`` axis;
   * ``checkpointing.solve_batch`` returns ``(S, j_max+1, t_max+1)`` V/K
     tables from one compiled call;
   * :func:`draw_lifetime_pool_batch` draws ``(S, n_trials, max_restarts+2)``
-    pools on-device in one shot;
+    pools on-device in one shot; ``seed`` may be a per-entry sequence, so a
+    flattened (scenario x seed) cell list draws every cell's pool — each
+    from its own seed's reference rng stream — in the same single call;
+  * :func:`stack_policy_tables` stacks per-cell policy tables of differing
+    provenance (age-dependent DP tables next to age-independent
+    Young-Daly/no-checkpoint columns) into one ``(B, j_max+1, t_max+1)``
+    tensor without changing any lookup result;
   * :func:`simulate_makespan_batch` accepts the leading axis on
     ``policy_table`` (optional — a 2-D table is shared), ``first`` and
-    ``pool``, vmapping the event kernel and returning ``(S, n_trials)``
-    makespans.  The float64 bit-exactness contract holds per scenario
-    slice: on a shared pool each slice equals the corresponding unbatched
-    run bit-for-bit;
-  * :meth:`ReuseTable.batch` evaluates all scenarios' reuse grids in one
-    vmapped call.
+    ``pool``, vmapping the event kernel and returning ``(B, n_trials)``
+    makespans.  The bit-exactness contract above holds per lane;
+  * :meth:`ReuseTable.batch` / :class:`ReuseTables` evaluate all scenarios'
+    reuse grids in one vmapped call, sharing one backing tensor.
+
+``scenarios.sweep_checkpointing(mode="batched")`` composes these into ONE
+executor dispatch for an entire sweep; see its docstring for the
+cell-index/unflattening bookkeeping.
 
 Typical use (Fig. 7 workload)::
 
@@ -76,9 +108,10 @@ from .policies import scheduling as sched_policy
 
 __all__ = [
     "dp_policy_table", "young_daly_policy_table", "no_checkpoint_policy_table",
+    "stack_policy_tables",
     "draw_lifetime_pool", "draw_lifetime_pool_batch",
     "simulate_makespan_batch", "simulate_makespan_engine",
-    "ReuseTable",
+    "ReuseTable", "ReuseTables",
 ]
 
 
@@ -100,6 +133,45 @@ def young_daly_policy_table(tau_steps: int, job_steps: int) -> np.ndarray:
 def no_checkpoint_policy_table(job_steps: int) -> np.ndarray:
     """Run-to-completion: the next 'segment' is the whole remaining job."""
     return np.arange(job_steps + 1, dtype=np.int32)[:, None]
+
+
+def stack_policy_tables(tables, t_axis: int | None = None) -> np.ndarray:
+    """Stack per-cell 2-D policy tables into one ``(B, j_max+1, t_axis)``
+    int32 tensor for the one-kernel executor.
+
+    The three Fig. 7 policy families produce tables of differing provenance
+    and age-axis width: the DP's ``K[j, t]`` is fully age-dependent
+    (``t_axis = t_max+1``) while Young-Daly and no-checkpoint tables are
+    age-independent ``(j_max+1, 1)`` columns.  An age-independent column is
+    widened by replication, which cannot change any lookup: the kernel reads
+    ``table[clip(j), clip(age)]`` and every age column holds the same
+    interval the 1-wide table would have produced via its age clip.  Tables
+    must share the remaining-work axis; a table that is neither 1-wide nor
+    ``t_axis``-wide is rejected rather than resampled.
+    """
+    tables = [np.asarray(t, np.int32) for t in tables]
+    if not tables:
+        raise ValueError("stack_policy_tables() needs at least one table")
+    if any(t.ndim != 2 for t in tables):
+        raise ValueError("stack_policy_tables() stacks 2-D (j, t) tables")
+    j_axis = tables[0].shape[0]
+    if any(t.shape[0] != j_axis for t in tables):
+        raise ValueError("policy tables must share the remaining-work axis; "
+                         f"got {sorted({t.shape[0] for t in tables})}")
+    if t_axis is None:
+        t_axis = max(t.shape[1] for t in tables)
+    out = np.empty((len(tables), j_axis, int(t_axis)), np.int32)
+    for b, t in enumerate(tables):
+        if t.shape[1] == t_axis:
+            out[b] = t
+        elif t.shape[1] == 1:
+            out[b] = np.broadcast_to(t, (j_axis, int(t_axis)))
+        else:
+            raise ValueError(
+                f"table {b} has age axis {t.shape[1]}; expected 1 (age-"
+                f"independent) or {t_axis} — widening an age-dependent "
+                f"table would need resampling, not replication")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +201,12 @@ def draw_lifetime_pool(lifetimes_fn: Callable, n_trials: int, *,
     return first, pool
 
 
+@jax.jit
+def _capped_icdf_kernel(dist, u, fl, L):
+    t = dist.icdf(jnp.minimum(u, fl * (1.0 - 1e-6)))
+    return jnp.where(u >= fl, jnp.asarray(L, t.dtype), t)
+
+
 def capped_icdf_draw(dist, u, fl, L):
     """The capped inverse-CDF draw both samplers share: lifetimes
     ``icdf(min(u, fl * (1 - 1e-6)))`` with the residual ``u >= fl`` mass
@@ -136,30 +214,41 @@ def capped_icdf_draw(dist, u, fl, L):
     (``checkpointing.model_lifetimes_fn``, the numpy reference) and
     ``(S, 1)``-stacked ones (:func:`draw_lifetime_pool_batch`) — keeping
     this contract in ONE place is what keeps the two paths bit-identical
-    under x64."""
-    t = np.asarray(dist.icdf(jnp.minimum(jnp.asarray(u),
-                                         jnp.asarray(fl * (1.0 - 1e-6)))),
-                   np.float64)
-    return np.where(u >= fl, L, t)
+    under x64.
+
+    The whole draw — inversion and deadline cap — runs through one
+    module-level jitted kernel that takes the distribution as a pytree
+    *argument*: the compiled bisection is cached per (family, shape,
+    dtype) instead of being re-traced through each fresh distribution
+    instance's closure, neither path can bake parameter constants into
+    its graph — both see literally the same executable — and the capped
+    result crosses the device boundary exactly once."""
+    return np.asarray(_capped_icdf_kernel(dist, jnp.asarray(u),
+                                          jnp.asarray(fl), jnp.asarray(L)),
+                      np.float64)
 
 
 def draw_lifetime_pool_batch(dists, n_trials: int, *, max_restarts: int = 64,
-                             seed: int = 0, start_age: float = 0.0):
-    """Batched :func:`draw_lifetime_pool` for a scenario list: ``first`` has
+                             seed=0, start_age: float = 0.0):
+    """Batched :func:`draw_lifetime_pool` for a list of cells: ``first`` has
     shape ``(S, n_trials)`` and ``pool`` ``(S, n_trials, max_restarts + 2)``.
 
-    The uniforms come from ONE ``np.random.default_rng(seed)`` stream in the
-    reference draw order (pool first, then the conditioned first draw), so
-    every scenario sees exactly the uniforms the serial per-scenario path
-    would see for that seed.  The inverse CDF then runs as one on-device
+    ``seed`` is either one integer — a scenario batch, every entry sharing
+    that seed's uniforms — or a sequence of ``len(dists)`` per-entry seeds,
+    which is how a flattened (scenario x seed) sweep cell list draws every
+    cell's pool in ONE call.  Either way each entry's uniforms come from its
+    own ``np.random.default_rng(seed)`` stream in the reference draw order
+    (pool first, then the conditioned first draw), so entry ``i`` sees
+    exactly the uniforms the serial per-scenario path would see for
+    ``(dists[i], seed_i)``.  The inverse CDF then runs as one on-device
     bisection over all ``S * n_trials * (max_restarts + 2)`` lifetimes —
     replacing S per-scenario numpy round-trips — by stacking each
-    scenario's launch-phase-resolved parameters to ``(S, 1)`` so the
+    entry's launch-phase-resolved parameters to ``(S, 1)`` so the
     distribution methods broadcast over the trailing draw axis.
 
-    Exactness: per-scenario parameters are resolved with the same scalar
+    Exactness: per-entry parameters are resolved with the same scalar
     eager ops as ``checkpointing.model_lifetimes_fn`` (``effective()`` for
-    the diurnal family), so under x64 every scenario slice reproduces the
+    the diurnal family), so under x64 every slice reproduces the
     numpy-reference pool bit-for-bit; in default float32 mode slices agree
     to float32 precision (~1e-6), far below Monte-Carlo noise.
     """
@@ -174,20 +263,41 @@ def draw_lifetime_pool_batch(dists, n_trials: int, *, max_restarts: int = 64,
     d_b = jax.tree_util.tree_map(
         lambda *ls: jnp.stack(ls)[:, None], *eff)
     S = len(dists)
-    rng = np.random.default_rng(seed)
-    u_pool = rng.uniform(size=n_trials * (max_restarts + 2))
-    u_first = rng.uniform(size=n_trials)
-    # scalar pre/post quantities, per scenario, as the numpy reference
+    n_pool = n_trials * (max_restarts + 2)
+    if np.ndim(seed) == 0:
+        rng = np.random.default_rng(seed)
+        u_pool = np.broadcast_to(rng.uniform(size=n_pool), (S, n_pool))
+        u_first = np.broadcast_to(rng.uniform(size=n_trials), (S, n_trials))
+    else:
+        seed = list(seed)
+        if len(seed) != S:
+            raise ValueError(f"per-entry seeds need one seed per entry: got "
+                             f"{len(seed)} seeds for {S} distributions")
+        # entries sharing a seed see the same reference stream — draw each
+        # unique seed's uniforms once; the big pool block is fanned out to
+        # the S entries on DEVICE (upload unique rows + take) instead of
+        # materializing an S-times-duplicated host copy.  take is an exact
+        # copy, so entry i's uniforms are bit-identical to its stream's.
+        draws, order = {}, []
+        for s in seed:
+            if s not in draws:
+                r = np.random.default_rng(s)
+                draws[s] = (len(order), r.uniform(size=n_pool),
+                            r.uniform(size=n_trials))
+                order.append(s)
+        u_pool = jnp.take(
+            jnp.asarray(np.stack([draws[s][1] for s in order])),
+            jnp.asarray([draws[s][0] for s in seed]), axis=0)
+        u_first = np.stack([draws[s][2] for s in seed])
+    # scalar pre/post quantities, per entry, as the numpy reference
     fl = np.array([float(d.cdf(d.L)) for d in eff])[:, None]
     L = np.array([float(d.L) for d in eff])[:, None]
-    pool = capped_icdf_draw(d_b, np.broadcast_to(u_pool, (S, u_pool.size)),
-                            fl, L)
+    pool = capped_icdf_draw(d_b, u_pool, fl, L)
     if start_age > 0:
         f_lo = np.array([float(d.cdf(start_age)) for d in eff])[:, None]
     else:
         f_lo = np.zeros((S, 1))
-    first = capped_icdf_draw(d_b, f_lo + u_first[None, :] * (1.0 - f_lo),
-                             fl, L)
+    first = capped_icdf_draw(d_b, f_lo + u_first * (1.0 - f_lo), fl, L)
     return first, pool.reshape(S, n_trials, max_restarts + 2)
 
 
@@ -195,10 +305,13 @@ def draw_lifetime_pool_batch(dists, n_trials: int, *, max_restarts: int = 64,
 # the event kernel
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
-                     delta_steps, max_restarts, max_events):
-    """One ``lax.while_loop`` over events; all state is (n_trials,) vectors.
+def _event_loop(policy_lookup, pool_lookup, first_steps, job_steps, age0_idx,
+                delta_steps, max_restarts, max_events):
+    """THE makespan event loop — one ``lax.while_loop`` over events, all
+    state in (n_trials,) vectors; every executor kernel is this loop with a
+    different pair of lookups (``policy_lookup(rem, age) -> interval``,
+    ``pool_lookup(draw) -> next lifetime``), so the traced operations per
+    trial — the bit-exactness contract — live in exactly one place.
 
     Works entirely in grid-step units: lifetimes arrive pre-converted to
     steps (initial sub-grid age offset already removed), VM age is an integer
@@ -211,8 +324,6 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
     """
     n = first_steps.shape[0]
     fdt = first_steps.dtype
-    j_hi = policy.shape[0] - 1
-    t_hi = policy.shape[1] - 1
 
     state = dict(
         remaining=jnp.full((n,), job_steps, jnp.int32),
@@ -234,15 +345,14 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
     def body(s):
         act = active(s)
         rem, age = s["remaining"], s["age_idx"]
-        i = policy[jnp.clip(rem, 0, j_hi), jnp.clip(age, 0, t_hi)]
+        i = policy_lookup(rem, age)
         i = jnp.clip(i, 1, jnp.maximum(rem, 1))
         w = jnp.where(i < rem, i + delta_steps, i)
         survive = (age + w).astype(fdt) <= s["life_s"]
         # preemption: time since VM start minus checkpointed prefix is lost
         loss = jnp.maximum(s["life_s"] - age.astype(fdt), 0.0)
         nxt_draw = s["draw"] + 1
-        nxt_life = pool_steps[jnp.arange(n),
-                              jnp.minimum(nxt_draw, max_restarts + 1)]
+        nxt_life = pool_lookup(nxt_draw)
 
         def upd(old, succ_val, fail_val):
             return jnp.where(act, jnp.where(survive, succ_val, fail_val), old)
@@ -265,15 +375,63 @@ def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
             out["remaining"] == 0)
 
 
-# scenario-batched kernels: vmap the event loop over the leading (S,) axis.
+@jax.jit
+def _makespan_kernel(policy, first_steps, pool_steps, job_steps, age0_idx,
+                     delta_steps, max_restarts, max_events):
+    """:func:`_event_loop` with direct per-call table/pool lookups."""
+    n = first_steps.shape[0]
+    j_hi = policy.shape[0] - 1
+    t_hi = policy.shape[1] - 1
+    return _event_loop(
+        lambda rem, age: policy[jnp.clip(rem, 0, j_hi),
+                                jnp.clip(age, 0, t_hi)],
+        lambda draw: pool_steps[jnp.arange(n),
+                                jnp.minimum(draw, max_restarts + 1)],
+        first_steps, job_steps, age0_idx, delta_steps, max_restarts,
+        max_events)
+
+
+# cell-batched kernels: vmap the event loop over the leading (B,) axis.
 # The while_loop batching rule freezes finished slices with selects, so each
-# scenario slice performs the reference IEEE operations — on a shared pool a
+# cell slice performs the reference IEEE operations — on a shared pool a
 # float64 slice is bit-identical to the unbatched kernel.
 _KERNEL_SCALARS = (None,) * 5
 _makespan_kernel_batch = jax.jit(jax.vmap(
     _makespan_kernel.__wrapped__, in_axes=(0, 0, 0) + _KERNEL_SCALARS))
 _makespan_kernel_batch_shared = jax.jit(jax.vmap(
     _makespan_kernel.__wrapped__, in_axes=(None, 0, 0) + _KERNEL_SCALARS))
+
+
+def _makespan_kernel_cell(policy_u, tidx, pool_all, pidx, first_steps,
+                          job_steps, age0_idx, delta_steps, max_restarts,
+                          max_events):
+    """One lane of the deduplicated one-kernel fold: the :func:`_event_loop`
+    reading the policy via ``policy_u[tidx]`` and the pool via
+    ``pool_all[pidx]`` instead of materialized per-lane copies.
+
+    Vmapped over ``(tidx, pidx, first_steps)`` with the unique-table tensor
+    ``(U, j_max+1, t_max+1)`` and the unique-pool tensor ``(Q, n_trials,
+    max_restarts+2)`` UNBATCHED, the whole sweep's gathers hit tens of MB
+    instead of the ``B``-times-replicated tensors — the difference between
+    the fold being faster or slower than the grouped dispatch it replaces.
+    Per lane the lookups return the very same integers/floats, so the
+    bit-exactness contract is untouched.
+    """
+    n = first_steps.shape[0]
+    j_hi = policy_u.shape[1] - 1
+    t_hi = policy_u.shape[2] - 1
+    return _event_loop(
+        lambda rem, age: policy_u[tidx, jnp.clip(rem, 0, j_hi),
+                                  jnp.clip(age, 0, t_hi)],
+        lambda draw: pool_all[pidx, jnp.arange(n),
+                              jnp.minimum(draw, max_restarts + 1)],
+        first_steps, job_steps, age0_idx, delta_steps, max_restarts,
+        max_events)
+
+
+_makespan_kernel_indexed = jax.jit(jax.vmap(
+    _makespan_kernel_cell,
+    in_axes=(None, 0, None, 0, 0) + _KERNEL_SCALARS))
 
 
 def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
@@ -283,7 +441,8 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
                             max_restarts: int = 64,
                             max_events: int | None = None,
                             unfinished: str = "nan",
-                            return_finished: bool = False):
+                            return_finished: bool = False,
+                            table_index=None, pool_index=None):
     """Vectorized executor over a shared pre-drawn lifetime pool.
 
     Semantics are identical to the Python reference
@@ -292,12 +451,25 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     the job resumes on a fresh VM after ``restart_overhead`` hours.  Returns
     makespans (hours), shape ``(n_trials,)``.
 
-    Scenario batching (leading-axis convention): when ``pool`` has a
-    leading scenario axis — shape ``(S, n_trials, max_restarts + 2)``, with
-    ``first`` of shape ``(S, n_trials)`` — the event kernel is vmapped over
-    it and the result is ``(S, n_trials)``.  ``policy_table`` may then be
-    either per-scenario ``(S, j_max+1, t_axis)`` or a shared 2-D table.
-    Each scenario slice keeps the bit-exactness contract above.
+    Cell batching (leading-axis convention): when ``pool`` has a leading
+    cell axis — shape ``(B, n_trials, max_restarts + 2)``, with ``first``
+    of shape ``(B, n_trials)`` — the event kernel is vmapped over it and
+    the result is ``(B, n_trials)``.  ``policy_table`` may then be either
+    per-cell ``(B, j_max+1, t_axis)`` (see :func:`stack_policy_tables`) or
+    a shared 2-D table.  The axis can be a scenario batch or a flattened
+    (scenario x policy x seed) sweep grid — each lane keeps the
+    bit-exactness contract in the module docstring either way.
+
+    Deduplicated fold (``table_index``/``pool_index``): a sweep grid
+    replicates tables across seeds and pools across policies.  Passing
+    ``table_index`` (shape ``(B,)`` into a ``(U, j_max+1, t_axis)``
+    ``policy_table`` of *unique* tables) and ``pool_index`` (shape ``(B,)``
+    into a ``(Q, n_trials, max_restarts + 2)`` ``pool`` of *unique* pools,
+    with ``first`` still per-cell ``(B, n_trials)``) runs the same B lanes
+    while the kernel gathers from the compact tensors — avoiding both the
+    host-side replication and the cache-hostile reads of B-times-duplicated
+    data.  Lane ``b`` computes bit-identically to the materialized
+    ``policy_table[table_index[b]]`` / ``pool[pool_index[b]]`` call.
 
     Trials can exit the event loop *unfinished* — either their ``max_restarts``
     budget is exhausted or the whole batch hits the ``max_events`` safety cap.
@@ -324,23 +496,52 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
     first_steps = (np.asarray(first, np.float64) - off0) / grid_dt
     pool_steps = np.asarray(pool, np.float64) / grid_dt
     table = np.asarray(policy_table, np.int32)
-    if pool_steps.ndim == 3:                 # leading scenario axis
-        if first_steps.shape != pool_steps.shape[:2]:
+    scalars = (jnp.int32(job_steps), jnp.int32(age0_idx),
+               jnp.int32(delta_steps), jnp.int32(max_restarts),
+               jnp.int32(max_events))
+    if (table_index is None) != (pool_index is None):
+        raise ValueError("table_index and pool_index must be passed together")
+    if table_index is not None:
+        tix = np.asarray(table_index, np.int32)
+        pix = np.asarray(pool_index, np.int32)
+        if table.ndim != 3 or pool_steps.ndim != 3:
+            raise ValueError("the indexed fold needs a (U, j, t) policy_table "
+                             "and a (Q, n_trials, max_restarts + 2) pool")
+        if first_steps.ndim != 2 \
+                or not (tix.shape == pix.shape == first_steps.shape[:1]) \
+                or first_steps.shape[1] != pool_steps.shape[1]:
             raise ValueError(
-                f"scenario-batched pool {pool_steps.shape} needs first of "
-                f"shape {pool_steps.shape[:2]}, got {first_steps.shape}")
-        kernel = (_makespan_kernel_batch if table.ndim == 3
-                  else _makespan_kernel_batch_shared)
-    elif table.ndim == 3:
-        raise ValueError("per-scenario policy_table needs a scenario-batched "
-                         "pool (S, n_trials, max_restarts + 2)")
+                f"indexed fold needs first of shape (B, n_trials) with "
+                f"(B,) table_index/pool_index and a matching pool trial "
+                f"axis; got first {first_steps.shape}, pool "
+                f"{pool_steps.shape}, table_index {tix.shape}, "
+                f"pool_index {pix.shape}")
+        if tix.size and (tix.min() < 0 or tix.max() >= table.shape[0]):
+            raise ValueError("table_index out of range")
+        if pix.size and (pix.min() < 0 or pix.max() >= pool_steps.shape[0]):
+            raise ValueError("pool_index out of range")
+        done, lost, restarts, finished = _makespan_kernel_indexed(
+            jnp.asarray(table), jnp.asarray(tix),
+            jnp.asarray(pool_steps, dtype), jnp.asarray(pix),
+            jnp.asarray(first_steps, dtype), *scalars)
     else:
-        kernel = _makespan_kernel
-    done, lost, restarts, finished = kernel(
-        jnp.asarray(table),
-        jnp.asarray(first_steps, dtype), jnp.asarray(pool_steps, dtype),
-        jnp.int32(job_steps), jnp.int32(age0_idx), jnp.int32(delta_steps),
-        jnp.int32(max_restarts), jnp.int32(max_events))
+        if pool_steps.ndim == 3:             # leading cell axis
+            if first_steps.shape != pool_steps.shape[:2]:
+                raise ValueError(
+                    f"scenario-batched pool {pool_steps.shape} needs first of "
+                    f"shape {pool_steps.shape[:2]}, got {first_steps.shape}")
+            kernel = (_makespan_kernel_batch if table.ndim == 3
+                      else _makespan_kernel_batch_shared)
+        elif table.ndim == 3:
+            raise ValueError("per-scenario policy_table needs a "
+                             "scenario-batched pool "
+                             "(S, n_trials, max_restarts + 2)")
+        else:
+            kernel = _makespan_kernel
+        done, lost, restarts, finished = kernel(
+            jnp.asarray(table),
+            jnp.asarray(first_steps, dtype), jnp.asarray(pool_steps, dtype),
+            *scalars)
     done = np.asarray(done, np.float64)
     lost = np.asarray(lost, np.float64)
     restarts = np.asarray(restarts, np.float64)
@@ -422,16 +623,9 @@ class ReuseTable:
         """Build one table per scenario from a SINGLE vmapped grid call
         (leading-axis convention; the scenarios must share ``L``).  Returns
         a list of per-scenario :class:`ReuseTable` views, interchangeable
-        with individually constructed ones."""
-        dists = list(dists)
-        L = float(dists[0].L)
-        if any(abs(float(d.L) - L) > 1e-12 for d in dists[1:]):
-            raise ValueError("ReuseTable.batch() requires a shared L")
-        T_values = np.asarray(np.sort(np.unique(T_values)), np.float64)
-        grids = np.asarray(_reuse_grid_batch(
-            dists_mod.stack(dists), jnp.asarray(T_values), L, int(n_age)))
-        return [cls(d, T_values, n_age=n_age, _table=grids[i])
-                for i, d in enumerate(dists)]
+        with individually constructed ones.  The views share one backing
+        tensor — see :class:`ReuseTables`, which this wraps."""
+        return list(ReuseTables(dists, T_values, n_age=n_age))
 
     def decide(self, remaining_work: float, vm_age: float) -> bool:
         ti = int(np.searchsorted(self.T_values, remaining_work))
@@ -441,3 +635,44 @@ class ReuseTable:
             ti -= 1
         ai = int(round(vm_age / self.L * (self.n_age - 1)))
         return bool(self.table[ti, min(max(ai, 0), self.n_age - 1)])
+
+
+class ReuseTables:
+    """The folded scenario batch of reuse-decision grids.
+
+    ONE vmapped grid call evaluates every scenario's (remaining-work x
+    VM-age) Eq. 10-vs-Eq. 9 decisions into a single ``(S, len(T_values),
+    n_age)`` boolean tensor; :meth:`view` (or indexing/iteration) returns
+    per-scenario :class:`ReuseTable` views that *share* that backing tensor,
+    so a whole service sweep costs one JAX dispatch and one allocation no
+    matter how many (policy x cluster x seed) cells later consume each
+    scenario's grid.  All scenarios must share the deadline ``L``.
+    """
+
+    def __init__(self, dists, T_values, *, n_age: int = 1441):
+        self._dists = list(dists)
+        if not self._dists:
+            raise ValueError("ReuseTables needs at least one distribution")
+        L = float(self._dists[0].L)
+        if any(abs(float(d.L) - L) > 1e-12 for d in self._dists[1:]):
+            raise ValueError("ReuseTables requires a shared L")
+        self.T_values = np.asarray(np.sort(np.unique(T_values)), np.float64)
+        self.L = L
+        self.n_age = int(n_age)
+        self.tables = np.asarray(_reuse_grid_batch(
+            dists_mod.stack(self._dists), jnp.asarray(self.T_values), L,
+            self.n_age))
+
+    def __len__(self) -> int:
+        return len(self._dists)
+
+    def view(self, s: int) -> ReuseTable:
+        """A per-scenario :class:`ReuseTable` over the shared tensor."""
+        return ReuseTable(self._dists[s], self.T_values, n_age=self.n_age,
+                          _table=self.tables[s])
+
+    def __getitem__(self, s: int) -> ReuseTable:
+        return self.view(s)
+
+    def __iter__(self):
+        return (self.view(s) for s in range(len(self)))

@@ -26,6 +26,31 @@ Faithfulness notes (see DESIGN.md §6):
 The solver is one jitted ``lax.fori_loop`` over j (vectorized over VM age and
 candidate interval); schedule extraction and the Monte-Carlo executor used by
 Fig. 7 live below it.
+
+Bit-exactness contract (what each batched kernel must reproduce)
+----------------------------------------------------------------
+This module holds both ends of two reference/production pairs; the reference
+side is retained forever, and restructuring the production side is only
+legal while these matches hold (enforced by ``tests/test_batched.py`` /
+``tests/test_sim_engine.py``):
+
+  * :func:`solve_batch` vs the per-scenario :func:`solve` — V *and* K
+    bit-identical per scenario slice at the solver's native float32, at any
+    session dtype: both build their ``Fc``/``Hc`` grids with the same eager
+    ops and the batched kernel keeps the reference expression tree
+    (hoisting, column-patching and argmin-restructuring may reorder the
+    schedule, never the per-element arithmetic, so XLA's FMA contraction
+    stays identical).
+  * The vectorized executor ``engine.simulate_makespan_batch`` vs
+    :func:`simulate_makespan` (the per-trial Python loop kept at the bottom
+    of this file) — bit-identical makespans on a shared pre-drawn pool with
+    x64 enabled, ~1e-6-relative in default float32 mode.  The loop body
+    works in integer grid units with lifetimes pre-converted OUTSIDE the
+    loop, so no multiply-add pattern exists for XLA to contract into an
+    FMA; any policy table handed to either executor must yield the same
+    interval for the same ``(remaining, age)`` lookup (this is why
+    ``engine.stack_policy_tables`` may only *replicate* age-independent
+    columns, never resample age-dependent ones).
 """
 from __future__ import annotations
 
@@ -157,8 +182,13 @@ def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     Fc = F_raw.at[-1].set(1.0)
     H_raw = dist.partial_expectation(jnp.zeros_like(tk), tk)
     Hc = H_raw.at[-1].add(atom * L)                      # include the L-atom
+    # scalars pinned to the solver's native f32: a python float would trace
+    # as weak f64 under x64 and shift parts of the DP arithmetic to f64,
+    # where the reference and batched kernels round differently — pinning
+    # keeps solve/solve_batch bit-identical to each other at any session
+    # dtype
     V, K = _solve_tables(Fc.astype(jnp.float32), Hc.astype(jnp.float32),
-                         grid_dt, restart_overhead,
+                         jnp.float32(grid_dt), jnp.float32(restart_overhead),
                          j_max=int(job_steps), t_max=t_max,
                          delta_steps=int(delta_steps), n_sweeps=n_sweeps)
     return DPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
@@ -320,9 +350,12 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
         Fcs.append(F_raw.at[-1].set(1.0).astype(jnp.float32))
         H_raw = d.partial_expectation(jnp.zeros_like(tk), tk)
         Hcs.append(H_raw.at[-1].add(atom * L).astype(jnp.float32))
-    V, K = _solve_tables_batch(jnp.stack(Fcs), jnp.stack(Hcs), grid_dt,
-                               restart_overhead, j_max=int(job_steps),
-                               t_max=t_max, delta_steps=int(delta_steps),
+    # f32-pinned scalars: see solve() — keeps V/K identical at any dtype
+    V, K = _solve_tables_batch(jnp.stack(Fcs), jnp.stack(Hcs),
+                               jnp.float32(grid_dt),
+                               jnp.float32(restart_overhead),
+                               j_max=int(job_steps), t_max=t_max,
+                               delta_steps=int(delta_steps),
                                n_sweeps=n_sweeps)
     return BatchDPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                          delta_steps=int(delta_steps),
@@ -441,12 +474,13 @@ def model_lifetimes_fn(dist):
     optionally conditioned on survival to ``min_age`` (F restricted to
     [F(min_age), 1], with the residual >=F(L) mass preempted at L).
 
-    Parameter leaves are normalized to jnp arrays up front so the compiled
-    bisection graph embeds array (not python-scalar) constants — exactly the
-    graph a slice of ``engine.draw_lifetime_pool_batch`` compiles, which is
+    Draws go through ``engine.capped_icdf_draw``, whose jitted kernel takes
+    the distribution as a pytree *argument* — this reference sampler and
+    ``engine.draw_lifetime_pool_batch`` therefore share one compiled
+    inversion with no parameter constants baked into either graph, which is
     what makes the batched pool reproduce this reference bit-for-bit under
-    x64 (python-float literals trigger scalar-constant algebra like
-    div-to-reciprocal that array constants do not).
+    x64.  Leaves are still normalized to jnp arrays up front so both paths
+    present identical leaf dtypes to that cache.
     """
     dist = jax.tree_util.tree_map(
         lambda l: jnp.asarray(l, jnp.result_type(float)), dist)

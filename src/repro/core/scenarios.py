@@ -2,22 +2,53 @@
 
 PR 1 removed the simulation bottleneck; this module turns the single static
 per-VM-type evaluation into *scenario diversity*: a scenario names a market
-condition — VM type x diurnal launch phase (paper Obs. 5), with optional
-parameter overrides — and resolves to a :class:`~repro.core.distributions.
-DiurnalConstrained` model.  The sweep runners expand
+condition — zone x diurnal launch phase x VM type (paper Obs. 5 plus the
+ZONE_PARAMS capacity-pressure regimes), with optional parameter overrides —
+and resolves to a :class:`~repro.core.distributions.DiurnalConstrained`
+model.  The sweep runners expand
 
     (scenario x policy x seed)                 checkpointing executor grids
     (scenario x policy x cluster_size x seed)  batch-service grids
 
-and drive ``engine.simulate_makespan_batch`` / ``service.run_bag_grid`` with
-the expensive per-distribution setup shared across each scenario's cell
-group: one DP solve + one policy table set + one pre-drawn lifetime pool per
-(scenario, seed) for the executor, one jitted :class:`engine.ReuseTable`
-grid call per scenario for the service.
+over the batched engine entry points.
+
+Sweep execution modes and their equivalence contract
+----------------------------------------------------
+:func:`sweep_checkpointing` runs the same grid three ways, orderable by how
+much of it is folded into the leading batch axis (the engine's leading-axis
+convention):
+
+  * ``mode="batched"`` (default, PR 4) — the ONE-KERNEL path: the whole
+    (scenario x policy x seed) grid is flattened to a cell axis
+    ``B = S*P*R``; one ``checkpointing.solve_batch`` call solves every DP,
+    one ``engine.draw_lifetime_pool_batch`` call draws every (scenario,
+    seed) pool from per-cell seeds, policy tables of differing provenance
+    are stacked by ``engine.stack_policy_tables``, and a SINGLE
+    scenario-batched executor dispatch produces every cell's makespans,
+    which are then unflattened back to labeled rows.
+  * ``mode="grouped"`` — the PR-3 path: scenario axis batched, but the
+    (seed x policy) cell groups still loop in Python (P*R executor
+    dispatches).  Retained as the timed reference the one-kernel fold is
+    benchmarked against.
+  * ``mode="serial"`` — the per-scenario reference path (one DP solve + one
+    numpy pool round-trip + one executor call per cell group, scenario by
+    scenario).  This is the semantic ground truth.
+
+All three modes emit identical row order and schema.  Equivalence contract
+(enforced by ``tests/test_batched.py`` / ``tests/test_scenarios.py``): DP
+tables and derived scalars (``expected_makespan_dp``, ``p_fail_fresh``) are
+bit-exact across modes at any dtype; with x64 enabled the makespan
+statistics are bit-identical row-for-row too, because each folded lane then
+reproduces the serial cell's IEEE operations exactly (see the engine module
+docstring).  In default float32 mode rows agree to the pool's float32
+inverse-CDF rounding, far below Monte-Carlo noise.  Truncated trials are
+NaN-flagged by the engine and excluded from row statistics, never silently
+averaged in; ``unfinished_frac`` records them per row in every mode.
 
 Adding a scenario is one :func:`register` call (see ROADMAP "Scenario
 sweeps"); ``benchmarks/scenario_sweep.py`` turns the default grid into the
-machine-readable ``BENCH_scenarios.json`` perf artifact.
+machine-readable ``BENCH_scenarios.json`` perf artifact (see
+``docs/bench_schemas.md``).
 """
 from __future__ import annotations
 
@@ -211,27 +242,59 @@ def sweep_checkpointing(scenarios: Iterable, *,
                         n_trials: int = 1000, grid_dt: float = 1.0 / 60.0,
                         delta_steps: int = 1, max_restarts: int = 64,
                         restart_overhead: float = 0.0,
-                        n_sweeps: int = 3, mode: str = "batched") -> list:
+                        n_sweeps: int = 3, mode: str = "batched",
+                        tables: Optional["ckpt.BatchDPTables"] = None) -> list:
     """Expand (scenario x policy x seed) over the vectorized executor.
 
-    ``mode="batched"`` (default) treats the scenario dimension as a leading
-    batch axis end-to-end: ONE ``checkpointing.solve_batch`` call solves
-    every scenario's DP together, ONE ``engine.draw_lifetime_pool_batch``
-    call per seed draws all scenarios' device pools, and each (seed, policy)
-    cell group runs as ONE scenario-batched executor call.  ``mode="serial"``
-    is the per-scenario path this replaced (one solve + one numpy pool
-    round-trip per scenario), retained as the reference and timed against
-    the batched path by ``benchmarks/scenario_sweep.py``.
+    ``mode="batched"`` (default) folds the WHOLE grid into the engine's
+    leading batch axis and dispatches one compiled executor call for all
+    ``B = S*P*R`` cells: one ``checkpointing.solve_batch`` DP call, one
+    ``engine.draw_lifetime_pool_batch`` call drawing every (scenario, seed)
+    pool from per-cell seeds, one ``engine.stack_policy_tables`` stack of
+    the per-cell policy tables, one kernel dispatch, then unflattening back
+    to labeled rows.  Cell ``b`` of the flat axis is the row-order index
+    ``(s*R + r)*P + p`` (scenario outer, seed, policy inner), and its pool
+    is shared across the P policies of the same (scenario, seed) — exactly
+    the sharing the serial path expresses with its nested loops.
 
-    Row order and schema are identical in both modes; per scenario the
-    solver tables are bit-exact across modes, so rows differ only by the
-    pool's float32 inverse-CDF rounding (well below Monte-Carlo noise).
-    Truncated trials are NaN-flagged by the engine, never silently
-    averaged in.
+    ``mode="grouped"`` is the PR-3 path this replaced — scenario axis
+    batched, (seed x policy) cell groups looped in Python — retained as the
+    timed comparison point for ``benchmarks/scenario_sweep.py``.
+    ``mode="serial"`` is the per-scenario reference path (one solve + one
+    numpy pool round-trip per scenario): the semantic ground truth.
+
+    Row order and schema are identical in all modes; the equivalence
+    contract between them (bit-exact DP scalars always; bit-identical rows
+    under x64; float32-rounding-close otherwise) is stated in the module
+    docstring and enforced by the test suite.  Truncated trials are
+    NaN-flagged by the engine, never silently averaged in.
+
+    ``tables`` (batched/grouped modes) reuses a previously solved
+    ``checkpointing.BatchDPTables`` for this scenario list, skipping the DP
+    solve entirely — the whole-grid *re-evaluation* path (fresh seeds,
+    trial counts or policies against fixed market models) then costs only
+    the pool draw and the single executor dispatch.
     """
-    if mode not in ("batched", "serial"):
-        raise ValueError(f"mode must be 'batched' or 'serial', got {mode!r}")
-    scs = _resolve(scenarios)
+    if mode not in ("batched", "grouped", "serial"):
+        raise ValueError(f"mode must be 'batched', 'grouped' or 'serial', "
+                         f"got {mode!r}")
+    scs = _resolve(scenarios)          # once: scenarios may be a generator
+    if tables is not None:
+        if mode == "serial":
+            raise ValueError("tables= reuse is for the batched/grouped "
+                             "modes; the serial reference path always "
+                             "re-solves")
+        if len(tables) != len(scs) or tables.K.shape[1] != job_steps + 1:
+            raise ValueError(
+                f"tables has {len(tables)} scenarios x j_max "
+                f"{tables.K.shape[1] - 1}; this sweep needs "
+                f"{len(scs)} x {job_steps}")
+        if tables.delta_steps != delta_steps \
+                or abs(tables.grid_dt - grid_dt) > 1e-12 \
+                or tables.restart_overhead != restart_overhead:
+            raise ValueError("tables was solved for a different "
+                             "(grid_dt, delta_steps, restart_overhead) "
+                             "workload")
     rows = []
     if mode == "serial":
         for sc in scs:
@@ -264,33 +327,75 @@ def sweep_checkpointing(scenarios: Iterable, *,
         return rows
 
     dist_list = [sc.dist() for sc in scs]
-    batch = ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt,
-                             delta_steps=delta_steps, n_sweeps=n_sweeps,
-                             restart_overhead=restart_overhead)
+    batch = tables if tables is not None else ckpt.solve_batch(
+        dist_list, job_steps, grid_dt=grid_dt, delta_steps=delta_steps,
+        n_sweeps=n_sweeps, restart_overhead=restart_overhead)
     ptables = {p: _policy_tables_batch(p, batch, job_steps, grid_dt,
                                        delta_steps, dist_list)
                for p in policies}
     p_fail_fresh = [float(d.cdf(job_steps * grid_dt)) for d in dist_list]
-    cells = {}
-    for seed in seeds:
-        first, pool = engine.draw_lifetime_pool_batch(
-            dist_list, n_trials, max_restarts=max_restarts, seed=seed)
-        for policy in policies:
-            mk, finished = engine.simulate_makespan_batch(
-                ptables[policy], job_steps, first=first, pool=pool,
-                grid_dt=grid_dt, delta_steps=delta_steps,
-                restart_overhead=restart_overhead,
-                max_restarts=max_restarts, unfinished="nan",
-                return_finished=True)
-            cells[seed, policy] = (mk, finished)
-    for s, sc in enumerate(scs):                 # serial-compatible row order
+    S, P, R = len(scs), len(policies), len(seeds)
+
+    if mode == "grouped":
+        cells = {}
         for seed in seeds:
+            first, pool = engine.draw_lifetime_pool_batch(
+                dist_list, n_trials, max_restarts=max_restarts, seed=seed)
             for policy in policies:
-                mk, finished = cells[seed, policy]
-                rows.append(_ckpt_row(
-                    sc, policy, seed, mk[s], finished[s], n_trials=n_trials,
-                    job_steps=job_steps, p_fail_fresh=p_fail_fresh[s],
-                    expected_makespan_dp=batch.expected_makespan(s, job_steps)))
+                mk, finished = engine.simulate_makespan_batch(
+                    ptables[policy], job_steps, first=first, pool=pool,
+                    grid_dt=grid_dt, delta_steps=delta_steps,
+                    restart_overhead=restart_overhead,
+                    max_restarts=max_restarts, unfinished="nan",
+                    return_finished=True)
+                cells[seed, policy] = (mk, finished)
+        for s, sc in enumerate(scs):             # serial-compatible row order
+            for seed in seeds:
+                for policy in policies:
+                    mk, finished = cells[seed, policy]
+                    rows.append(_ckpt_row(
+                        sc, policy, seed, mk[s], finished[s],
+                        n_trials=n_trials, job_steps=job_steps,
+                        p_fail_fresh=p_fail_fresh[s],
+                        expected_makespan_dp=batch.expected_makespan(
+                            s, job_steps)))
+        return rows
+
+    # one-kernel fold: flat cell axis b = (s*R + r)*P + p, i.e. row order.
+    # Pools depend on (scenario, seed) only, so the S*R unique pools are
+    # drawn in one per-cell-seeded call; tables depend on (policy,
+    # scenario) only.  Both stay deduplicated on device — the executor
+    # fans them out to the B lanes through table_index/pool_index gathers
+    # (see the engine's "deduplicated fold" notes), which is what keeps
+    # the single dispatch faster than the grouped loop it replaces.
+    first_sr, pool_sr = engine.draw_lifetime_pool_batch(
+        [d for d in dist_list for _ in seeds], n_trials,
+        max_restarts=max_restarts,
+        seed=[seed for _ in dist_list for seed in seeds])
+    uniq, keys = [], {}
+    table_ix = np.empty(S * R * P, np.int32)
+    pool_ix = np.repeat(np.arange(S * R), P)
+    for b, (s, _seed, policy) in enumerate(
+            itertools.product(range(S), seeds, policies)):
+        key = (policy, s if np.asarray(ptables[policy]).ndim == 3 else -1)
+        if key not in keys:
+            keys[key] = len(uniq)
+            uniq.append(ptables[policy][s] if key[1] >= 0
+                        else ptables[policy])
+        table_ix[b] = keys[key]
+    table_u = engine.stack_policy_tables(uniq, t_axis=batch.K.shape[2])
+    mk_b, fin_b = engine.simulate_makespan_batch(
+        table_u, job_steps, first=first_sr[pool_ix], pool=pool_sr,
+        grid_dt=grid_dt, delta_steps=delta_steps,
+        restart_overhead=restart_overhead, max_restarts=max_restarts,
+        unfinished="nan", return_finished=True,
+        table_index=table_ix, pool_index=pool_ix)
+    for b, (s, seed, policy) in enumerate(
+            itertools.product(range(S), seeds, policies)):
+        rows.append(_ckpt_row(
+            scs[s], policy, seed, mk_b[b], fin_b[b], n_trials=n_trials,
+            job_steps=job_steps, p_fail_fresh=p_fail_fresh[s],
+            expected_makespan_dp=batch.expected_makespan(s, job_steps)))
     return rows
 
 
@@ -304,19 +409,19 @@ def sweep_service(scenarios: Iterable, *,
                   seeds: Sequence[int] = (0,), n_jobs: int = 40,
                   job_hours: float = 2.0, jitter: float = 0.1, **kw) -> list:
     """Expand (scenario x policy x cluster_size x seed) over the batch
-    service.  The model policy's reuse grids for ALL scenarios are built by
-    one vmapped :meth:`engine.ReuseTable.batch` call up front (the bag
-    lengths depend only on the seeds, so every scenario shares one
-    remaining-work axis); each scenario's cell group then goes through
-    ``service.run_bag_grid`` with its precomputed table, keeping the event
-    loops numpy-only.  Returns flat dict rows with the headline service
-    metrics.
+    service.  The model policy's reuse grids for ALL scenarios are folded
+    into one :class:`engine.ReuseTables` tensor up front — a single vmapped
+    grid call, one backing allocation (the bag lengths depend only on the
+    seeds, so every scenario shares one remaining-work axis); each
+    scenario's cell group then goes through ``service.run_bag_grid`` with
+    its shared view of that tensor, keeping the event loops numpy-only.
+    Returns flat dict rows with the headline service metrics.
     """
     scs = _resolve(scenarios)
     tables = [None] * len(scs)
     if "model" in policies and kw.get("vectorized_reuse", True):
         dist_list = [sc.dist() for sc in scs]
-        tables = engine.ReuseTable.batch(
+        tables = engine.ReuseTables(
             dist_list,
             service_mod.grid_reuse_values(dist_list[0], seeds=tuple(seeds),
                                           n_jobs=n_jobs, job_hours=job_hours,

@@ -137,15 +137,14 @@ class BatchService:
     _pool_pos: int = 0
 
     def _model_sampler(self, rng, n):
-        # batched inverse-CDF pool: one JAX dispatch per ~4096 draws
+        # batched inverse-CDF pool: one JAX dispatch per ~4096 draws,
+        # through the engine's shared (jit-cached) capped-draw kernel
         if self._pool is None or self._pool_pos + n > len(self._pool):
-            import jax.numpy as jnp
             u = rng.uniform(size=4096)
             fl = float(self.dist.cdf(self.dist.L))
-            t = np.array(self.dist.icdf(jnp.minimum(jnp.asarray(u),
-                                                    fl * (1 - 1e-6))))
-            t[u >= fl] = float(self.dist.L)
-            self._pool, self._pool_pos = t, 0
+            self._pool = engine.capped_icdf_draw(self.dist, u, fl,
+                                                 float(self.dist.L))
+            self._pool_pos = 0
         out = self._pool[self._pool_pos:self._pool_pos + n]
         self._pool_pos += n
         return out

@@ -1,5 +1,6 @@
-"""Batched scenario axis: distribution stacking, the batched DP solver, the
-device lifetime pools, the scenario-batched executor and ReuseTable.batch.
+"""Batched scenario axis + the PR-4 one-kernel fold: distribution stacking,
+the batched DP solver, the device lifetime pools, the cell-batched executor
+(including the deduplicated table/pool indexing) and the folded ReuseTables.
 
 The core contracts under test:
 
@@ -8,11 +9,20 @@ The core contracts under test:
     default scenario grid — the batched kernel restructures the loop but
     keeps the reference expression tree;
   * ``engine.draw_lifetime_pool_batch`` slices reproduce the numpy-reference
-    ``engine.draw_lifetime_pool`` under a shared seed (bit-exact under x64,
-    float32-close otherwise);
-  * a scenario-batched ``engine.simulate_makespan_batch`` keeps the float64
-    bit-exactness contract per scenario slice on a shared pool.
+    ``engine.draw_lifetime_pool`` under a shared seed — and under PER-ENTRY
+    seeds, entry ``i`` reproduces the reference draw for ``seed_i`` (bit-exact
+    under x64, float32-close otherwise);
+  * a cell-batched ``engine.simulate_makespan_batch`` keeps the float64
+    bit-exactness contract per lane on a shared pool, whether lanes are
+    materialized ``(B, ...)`` slices or ``table_index``/``pool_index``
+    gathers into deduplicated tensors;
+  * ``scenarios.sweep_checkpointing(mode="batched")`` — the whole
+    (scenario x policy x seed) grid in ONE executor dispatch — unflattens
+    to rows that are exactly the serial reference's rows (property test,
+    x64, NaN-flagged unfinished trials included).
 """
+import itertools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -149,6 +159,33 @@ def test_pool_batch_bitexact_x64(grid_dists):
                 assert np.array_equal(first, first_b[s]), (start_age, s)
 
 
+def test_pool_batch_per_entry_seeds(grid_dists):
+    """The (B,)-keyed seed fold: entry i of a per-entry-seeded call must
+    reproduce the same distribution's single-seed batched draw for seed_i —
+    the contract the one-kernel sweep's (scenario x seed) flattening rests
+    on.  Also: a constant seed list equals the scalar-seed call exactly."""
+    ds = grid_dists[:2]
+    n, mr = 60, 6
+    cells = [(d, s) for d in ds for s in (0, 7)]
+    first_b, pool_b = E.draw_lifetime_pool_batch(
+        [d for d, _ in cells], n, max_restarts=mr,
+        seed=[s for _, s in cells])
+    assert pool_b.shape == (len(cells), n, mr + 2)
+    for i, (d, s) in enumerate(cells):
+        ref_first, ref_pool = E.draw_lifetime_pool_batch(
+            [d], n, max_restarts=mr, seed=s)
+        np.testing.assert_array_equal(pool_b[i], ref_pool[0])
+        np.testing.assert_array_equal(first_b[i], ref_first[0])
+    f_scalar, p_scalar = E.draw_lifetime_pool_batch(ds, n, max_restarts=mr,
+                                                    seed=3)
+    f_list, p_list = E.draw_lifetime_pool_batch(ds, n, max_restarts=mr,
+                                                seed=[3, 3])
+    np.testing.assert_array_equal(p_scalar, p_list)
+    np.testing.assert_array_equal(f_scalar, f_list)
+    with pytest.raises(ValueError, match="one seed per entry"):
+        E.draw_lifetime_pool_batch(ds, n, max_restarts=mr, seed=[0])
+
+
 # ---------------------------------------------------------------------------
 # scenario-batched executor
 # ---------------------------------------------------------------------------
@@ -176,6 +213,86 @@ def test_batched_executor_bitexact_per_slice(grid_dists):
                     table_of(s), job, first=first_b[s], pool=pool_b[s],
                     grid_dt=GRID, max_restarts=16, unfinished="partial")
                 assert np.array_equal(mk, mk_b[s]), s
+
+
+def test_stack_policy_tables_widening_and_errors():
+    """Stacking tables of differing provenance: age-independent columns are
+    replicated (identical lookups), age-dependent tables pass through, and
+    anything that would need resampling is rejected."""
+    job = 12
+    dp_like = np.tile(np.arange(job + 1, dtype=np.int32)[:, None], (1, 5))
+    yd = E.young_daly_policy_table(3, job)                 # (job+1, 1)
+    none = E.no_checkpoint_policy_table(job)               # (job+1, 1)
+    out = E.stack_policy_tables([dp_like, yd, none])
+    assert out.shape == (3, job + 1, 5) and out.dtype == np.int32
+    np.testing.assert_array_equal(out[0], dp_like)
+    for t in range(5):                                     # replication only
+        np.testing.assert_array_equal(out[1][:, t], yd[:, 0])
+        np.testing.assert_array_equal(out[2][:, t], none[:, 0])
+    # explicit t_axis widens 1-wide tables too
+    assert E.stack_policy_tables([yd], t_axis=7).shape == (1, job + 1, 7)
+    with pytest.raises(ValueError, match="at least one"):
+        E.stack_policy_tables([])
+    with pytest.raises(ValueError, match="share the remaining-work axis"):
+        E.stack_policy_tables([yd, E.no_checkpoint_policy_table(job + 1)])
+    with pytest.raises(ValueError, match="resampling"):
+        E.stack_policy_tables([dp_like[:, :3], dp_like])
+    with pytest.raises(ValueError, match="2-D"):
+        E.stack_policy_tables([np.zeros((2, 3, 4), np.int32)])
+
+
+def test_indexed_executor_matches_materialized(grid_dists):
+    """table_index/pool_index gathers into deduplicated tensors must run
+    each lane bit-identically to the materialized (B, ...) call (shared
+    x64 pool => exact equality is required, not approximate)."""
+    ds = grid_dists[:2]
+    job = 60
+    batch = C.solve_batch(ds, job, grid_dt=GRID)
+    uniq = E.stack_policy_tables(
+        [np.asarray(batch.K[0]), np.asarray(batch.K[1]),
+         E.no_checkpoint_policy_table(job)])
+    first_q, pool_q = E.draw_lifetime_pool_batch(
+        [d for d in ds for _ in (0, 1)], 80, max_restarts=8,
+        seed=[s for _ in ds for s in (0, 1)])
+    # B = 8 lanes: (scenario s, seed r, policy p in {dp, none})
+    cells = [(s, r, p) for s in range(2) for r in range(2) for p in range(2)]
+    tix = np.array([s if p == 0 else 2 for s, r, p in cells], np.int32)
+    pix = np.array([s * 2 + r for s, r, p in cells], np.int32)
+    with enable_x64():
+        mk_idx = E.simulate_makespan_batch(
+            uniq, job, first=first_q[pix], pool=pool_q, grid_dt=GRID,
+            max_restarts=8, unfinished="partial",
+            table_index=tix, pool_index=pix)
+        mk_mat = E.simulate_makespan_batch(
+            uniq[tix], job, first=first_q[pix], pool=pool_q[pix],
+            grid_dt=GRID, max_restarts=8, unfinished="partial")
+    assert mk_idx.shape == (8, 80)
+    np.testing.assert_array_equal(mk_idx, mk_mat)
+
+
+def test_indexed_executor_validation(grid_dists):
+    job = 30
+    table = E.no_checkpoint_policy_table(job)
+    uniq = E.stack_policy_tables([table])
+    first = np.full((2, 4), 24.0)
+    pool = np.full((1, 4, 6), 24.0)
+    ix = np.zeros(2, np.int32)
+    with pytest.raises(ValueError, match="passed together"):
+        E.simulate_makespan_batch(uniq, job, first=first, pool=pool,
+                                  max_restarts=4, table_index=ix)
+    with pytest.raises(ValueError, match="indexed fold needs"):
+        E.simulate_makespan_batch(table, job, first=first, pool=pool,
+                                  max_restarts=4, table_index=ix,
+                                  pool_index=ix)
+    with pytest.raises(ValueError, match="table_index out of range"):
+        E.simulate_makespan_batch(uniq, job, first=first, pool=pool,
+                                  max_restarts=4,
+                                  table_index=np.array([0, 5], np.int32),
+                                  pool_index=ix)
+    with pytest.raises(ValueError, match="pool_index out of range"):
+        E.simulate_makespan_batch(uniq, job, first=first, pool=pool,
+                                  max_restarts=4, table_index=ix,
+                                  pool_index=np.array([0, 1], np.int32))
 
 
 def test_batched_executor_finished_mask_and_errors():
@@ -220,6 +337,129 @@ def test_reuse_table_batch_requires_shared_L():
     with pytest.raises(ValueError, match="shared L"):
         E.ReuseTable.batch([D.Constrained(), D.Constrained(L=12.0)],
                            np.array([1.0]))
+
+
+def test_reuse_tables_container_shares_backing_tensor(grid_dists):
+    """ReuseTables is the folded form: one (S, T, age) tensor, per-scenario
+    views that share it (no copies) and decide exactly like individually
+    constructed tables."""
+    ds = grid_dists[:3]
+    T_vals = np.array([0.5, 1.5, 3.0])
+    folded = E.ReuseTables(ds, T_vals, n_age=65)
+    assert len(folded) == 3 and folded.tables.shape == (3, 3, 65)
+    for s, (d, view) in enumerate(zip(ds, folded)):
+        assert view.table.base is folded.tables
+        ref = E.ReuseTable(d, T_vals, n_age=65)
+        assert np.array_equal(view.table, ref.table)
+        assert view.decide(1.5, 2.0) == ref.decide(1.5, 2.0)
+    assert np.array_equal(folded[1].table, folded.view(1).table)
+    with pytest.raises(ValueError, match="at least one"):
+        E.ReuseTables([], T_vals)
+
+
+# ---------------------------------------------------------------------------
+# one-kernel sweep: unflattening bookkeeping (PR-4 fold)
+# ---------------------------------------------------------------------------
+
+def _assert_rows_identical(a_rows, b_rows):
+    """Exact row-for-row equality, treating the engine's NaN flag for
+    unfinished-trial statistics as equal to itself."""
+    assert len(a_rows) == len(b_rows)
+    for ra, rb in zip(a_rows, b_rows):
+        assert set(ra) == set(rb)
+        for k, va in ra.items():
+            vb = rb[k]
+            if isinstance(va, float) and np.isnan(va):
+                assert isinstance(vb, float) and np.isnan(vb), k
+            else:
+                assert va == vb, (k, va, vb)
+
+
+_SWEEP_GRID = None
+
+
+def _sweep_scenarios():
+    global _SWEEP_GRID
+    if _SWEEP_GRID is None:
+        _SWEEP_GRID = SC.default_grid(vm_types=("n1-highcpu-16",),
+                                      phases=("day", "night"),
+                                      zones=("us-east1-b",))
+    return _SWEEP_GRID
+
+
+def test_one_kernel_unfinished_rows_match_serial():
+    """max_restarts=0 forces unfinished trials: the NaN-flagged statistics
+    (makespan_* NaN when no trial finished, unfinished_frac > 0) must come
+    through the one-kernel unflattening exactly as the serial path reports
+    them."""
+    kw = dict(policies=("dp", "none"), seeds=(0, 3), job_steps=30,
+              n_trials=24, max_restarts=0)
+    with enable_x64():
+        rows_b = SC.sweep_checkpointing(_sweep_scenarios(), mode="batched",
+                                        **kw)
+        rows_s = SC.sweep_checkpointing(_sweep_scenarios(), mode="serial",
+                                        **kw)
+    assert any(r["unfinished_frac"] > 0 for r in rows_s), \
+        "workload failed to produce unfinished trials"
+    _assert_rows_identical(rows_b, rows_s)
+
+
+def test_sweep_tables_reuse_and_validation():
+    """tables= skips the DP solve for whole-grid re-evaluation: rows equal
+    the self-solving sweep exactly; mismatched workloads are rejected."""
+    scs = _sweep_scenarios()
+    kw = dict(policies=("dp", "none"), seeds=(1,), job_steps=30, n_trials=20)
+    batch = C.solve_batch([sc.dist() for sc in scs], 30, grid_dt=1.0 / 60.0)
+    for mode in ("batched", "grouped"):
+        _assert_rows_identical(
+            SC.sweep_checkpointing(scs, mode=mode, tables=batch, **kw),
+            SC.sweep_checkpointing(scs, mode=mode, **kw))
+    with pytest.raises(ValueError, match="serial reference"):
+        SC.sweep_checkpointing(scs, mode="serial", tables=batch, **kw)
+    with pytest.raises(ValueError, match="needs 2 x 40"):
+        SC.sweep_checkpointing(scs, tables=batch,
+                               **dict(kw, job_steps=40))
+    with pytest.raises(ValueError, match="different"):
+        SC.sweep_checkpointing(scs, tables=batch, delta_steps=2, **kw)
+
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # pragma: no cover - hypothesis is a test dependency
+    st = None
+
+if st is not None:
+    _sweep_cases = st.fixed_dictionaries({
+        "policies": st.sampled_from([
+            ("dp",), ("none",), ("young_daly",),
+            ("dp", "none"), ("none", "young_daly", "dp")]),
+        "seeds": st.sampled_from([(0,), (1, 4), (2, 0)]),
+        "max_restarts": st.sampled_from([0, 2, 64]),
+    })
+
+    @settings(max_examples=5, deadline=None)
+    @given(_sweep_cases)
+    def test_one_kernel_rows_equal_serial_property(case):
+        """Property: for ANY (policy subset, seed list, restart budget) the
+        one-kernel sweep's labeled rows — produced by one executor dispatch
+        plus unflattening — are exactly the serial reference's rows under
+        x64, NaN flags included."""
+        kw = dict(job_steps=30, n_trials=24, **case)
+        with enable_x64():
+            rows_b = SC.sweep_checkpointing(_sweep_scenarios(),
+                                            mode="batched", **kw)
+            rows_s = SC.sweep_checkpointing(_sweep_scenarios(),
+                                            mode="serial", **kw)
+        coords = [(r["scenario"], r["policy"], r["seed"]) for r in rows_b]
+        assert len(set(coords)) == len(coords) == \
+            len(_sweep_scenarios()) * len(case["policies"]) * \
+            len(case["seeds"])
+        _assert_rows_identical(rows_b, rows_s)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="property tests need hypothesis installed")
+    def test_one_kernel_rows_equal_serial_property():
+        pass
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,24 @@ def test_icdf_roundtrip(name):
                                atol=1e-5)
 
 
+def test_icdf_newton_accuracy_bounds():
+    """The bracketed-Newton inversion must hit machine precision for every
+    proper (production-envelope) fit under x64, and degrade gracefully —
+    not silently stall — on out-of-envelope saturating fits whose clipped
+    CDF plateaus at 1 before L (the documented ~1e-4 worst case)."""
+    with enable_x64():
+        for vm_type in D.VM_TYPE_PARAMS:
+            d = D.constrained_for(vm_type)
+            u = jnp.linspace(1e-9, float(d.cdf(d.L)) - 1e-9, 20001)
+            err = np.abs(np.asarray(d.cdf(d.icdf(u))) - np.asarray(u))
+            assert err.max() < 1e-12, (vm_type, err.max())
+        sat = D.Constrained(tau1=0.2, tau2=0.05, b=23.9, A=0.49)
+        assert float(sat.cdf_raw(23.95)) > 1.0, "fit must saturate"
+        u = jnp.linspace(1e-9, float(sat.cdf(sat.L)) - 1e-9, 20001)
+        err = np.abs(np.asarray(sat.cdf(sat.icdf(u))) - np.asarray(u))
+        assert err.max() < 5e-4, err.max()
+
+
 def test_sampling_matches_cdf():
     d = DIURNAL["night"]()
     s = d.sample(jax.random.PRNGKey(0), (40000,))
@@ -190,26 +208,28 @@ def test_sweep_checkpointing_grid_shape_and_determinism():
         assert a == b
 
 
-def test_sweep_checkpointing_batched_matches_serial():
-    """The batched scenario axis must reproduce the serial per-scenario
-    sweep: identical row order/coords, bit-identical DP expectations and
-    fresh-VM failure probabilities, and makespan statistics within the
-    pool's float32 inverse-CDF rounding (far below Monte-Carlo noise)."""
+def test_sweep_checkpointing_modes_match_serial():
+    """The one-kernel fold (mode="batched") and the PR-3 grouped path must
+    both reproduce the serial per-scenario sweep: identical row
+    order/coords, bit-identical DP expectations and fresh-VM failure
+    probabilities, and makespan statistics within the pool's float32
+    inverse-CDF rounding (far below Monte-Carlo noise)."""
     grid = SC.default_grid(vm_types=("n1-highcpu-16", "n1-highcpu-32"),
                            phases=("day", "night"), zones=("us-east1-b",))
     kw = dict(policies=("dp", "young_daly", "none"), seeds=(0, 1),
               job_steps=60, n_trials=80)
-    batched = SC.sweep_checkpointing(grid, mode="batched", **kw)
     serial = SC.sweep_checkpointing(grid, mode="serial", **kw)
-    assert len(batched) == len(serial) == len(grid) * 3 * 2
-    for b, s in zip(batched, serial):
-        assert (b["scenario"], b["policy"], b["seed"]) == \
-            (s["scenario"], s["policy"], s["seed"])
-        assert b["expected_makespan_dp"] == s["expected_makespan_dp"]
-        assert b["p_fail_fresh"] == s["p_fail_fresh"]
-        assert b["unfinished_frac"] == s["unfinished_frac"] == 0.0
-        np.testing.assert_allclose(b["makespan_mean"], s["makespan_mean"],
-                                   rtol=5e-3)
+    for mode in ("batched", "grouped"):
+        rows = SC.sweep_checkpointing(grid, mode=mode, **kw)
+        assert len(rows) == len(serial) == len(grid) * 3 * 2
+        for b, s in zip(rows, serial):
+            assert (b["scenario"], b["policy"], b["seed"]) == \
+                (s["scenario"], s["policy"], s["seed"])
+            assert b["expected_makespan_dp"] == s["expected_makespan_dp"]
+            assert b["p_fail_fresh"] == s["p_fail_fresh"]
+            assert b["unfinished_frac"] == s["unfinished_frac"] == 0.0
+            np.testing.assert_allclose(b["makespan_mean"],
+                                       s["makespan_mean"], rtol=5e-3)
     with pytest.raises(ValueError, match="mode"):
         SC.sweep_checkpointing(grid, mode="bogus", **kw)
 
