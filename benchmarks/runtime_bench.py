@@ -1,0 +1,94 @@
+"""Closed-loop runtime benchmark: adaptation lag vs stale-table regret.
+
+Runs ``repro.core.runtime.FleetRuntime`` against the deterministic default
+fault schedule (drift regime switch + injected fit divergences + one solve
+timeout + a preemption storm, all seeded) at several refit cadences, and
+records per cadence:
+
+* ``adaptation_lag_obs`` — observations between the injected drift and the
+  table swap that answered it (detection + retries + solve);
+* ``regret_hours`` / ``regret_frac`` — the paired stale-vs-fresh makespan
+  gap at that swap (same lifetime pool, displaced K vs fresh K);
+* staleness, retry and fault counters.
+
+The (lag, regret) rows trace the operational trade-off the paper's
+Discussion gestures at but never measures: refit more often and you adapt
+faster but burn more solves; refit rarely and the fleet serves a stale
+schedule for longer, paying `regret x lag` in makespan.  Results land in
+``BENCH_runtime.json`` (schema in ``docs/bench_schemas.md``).
+"""
+from __future__ import annotations
+
+import time
+
+from repro import fault
+from repro.core import runtime as rt
+
+from .common import emit, timed, write_bench_json
+
+SCHEMA = 1
+
+
+def _run_one(refit_every: int, *, n_obs: int, quick: bool) -> dict:
+    cfg = rt.RuntimeConfig(
+        job_steps=40, grid_dt=0.25, window=4 * refit_every,
+        refit_every=refit_every, min_samples=48,
+        stream_block=128, stream_vm_types=("n1-highcpu-2",),
+        regret_trials=64 if quick else 256,
+        retry_backoff_obs=max(refit_every // 4, 4), max_retries=3)
+    inj = fault.FaultInjector(fault.default_schedule(n_obs), seed=0)
+    runtime = rt.FleetRuntime(cfg, injector=inj)
+    t0 = time.perf_counter()
+    rep = runtime.run(n_obs)
+    wall_s = time.perf_counter() - t0
+    swaps = [s for s in rep.swaps if s.reason == "change-point"]
+    return {
+        "refit_every": refit_every,
+        "n_obs": rep.n_obs,
+        "n_refits": rep.n_refits,
+        "change_points": rep.change_points,
+        "n_swaps": len(rep.swaps),
+        "adaptation_lag_obs": rep.adaptation_lag_obs,
+        "regret_hours": rep.regret_hours,
+        "regret_frac": rep.regret_frac,
+        "stale_obs_total": rep.stale_obs_total,
+        "fit_retries": rep.retries["fit"],
+        "solve_retries": rep.retries["solve"],
+        "degraded_at_end": rep.degraded,
+        "warm_swaps": sum(1 for s in rep.swaps if s.warm),
+        "mean_solve_seconds": (sum(s.solve_seconds for s in swaps)
+                               / len(swaps) if swaps else None),
+        "wall_seconds": round(wall_s, 3),
+    }
+
+
+def run(quick: bool = False) -> None:
+    n_obs = 400 if quick else 1200
+    cadences = (32, 64) if quick else (32, 64, 128)
+    rows = []
+    for refit_every in cadences:
+        row, us = timed(_run_one, refit_every, n_obs=n_obs, quick=quick)
+        rows.append(row)
+        lag = row["adaptation_lag_obs"]
+        reg = row["regret_frac"]
+        emit(f"runtime/refit_every={refit_every}", us,
+             f"lag={lag} regret_frac="
+             f"{'None' if reg is None else f'{reg:.4f}'}")
+    payload = {
+        "schema": SCHEMA,
+        "mode": "quick" if quick else "full",
+        "quick": bool(quick),
+        "n_obs": n_obs,
+        "fault_schedule": [
+            {"kind": e.kind, "at_obs": e.at_obs, "duration": e.duration,
+             "param": {} if e.param is None
+             else {k: list(v) if isinstance(v, tuple) else v
+                   for k, v in e.param.items()}}
+            for e in fault.default_schedule(n_obs)],
+        "rows": rows,
+    }
+    write_bench_json("BENCH_runtime.json", payload, emit_as="runtime/json")
+
+
+if __name__ == "__main__":
+    run()

@@ -135,6 +135,32 @@ def no_checkpoint_policy_table(job_steps: int) -> np.ndarray:
     return np.arange(job_steps + 1, dtype=np.int32)[:, None]
 
 
+def validate_policy_table(table) -> np.ndarray:
+    """Reject a policy table the executor must never serve from: NaN/inf
+    (a half-written or diverged solve) or intervals outside ``[0, j]`` /
+    zero with work remaining (which would wedge the executor's progress
+    loop at ``max(1, min(i, remaining))`` in ways the solve never
+    intended).  Returns the table as int32 on success; raises ValueError.
+
+    The closed-loop runtime calls this on every candidate table before the
+    atomic hot-swap — validation failures degrade to the last-good table.
+    """
+    raw = np.asarray(table)
+    if not np.all(np.isfinite(raw)):
+        raise ValueError("validate_policy_table: non-finite entries")
+    t = raw.astype(np.int32)
+    if t.ndim != 2:
+        raise ValueError(f"validate_policy_table: expected a 2-D (j, t) "
+                         f"table, got shape {raw.shape}")
+    j = np.arange(t.shape[0], dtype=np.int32)[:, None]
+    if np.any(t < 0) or np.any(t > j):
+        raise ValueError("validate_policy_table: intervals outside [0, j]")
+    if t.shape[0] > 1 and np.any(t[1:] < 1):
+        raise ValueError("validate_policy_table: zero interval with work "
+                         "remaining (j >= 1)")
+    return t
+
+
 def stack_policy_tables(tables, t_axis: int | None = None) -> np.ndarray:
     """Stack per-cell 2-D policy tables into one ``(B, j_max+1, t_axis)``
     int32 tensor for the one-kernel executor.

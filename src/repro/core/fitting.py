@@ -13,14 +13,23 @@ maps theta -> positive/bounded natural parameters.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import distributions as dist_mod
 from .distributions import (Constrained, Empirical, Exponential,
                             GompertzMakeham, Weibull, DEADLINE_HOURS)
+
+
+class FitDiverged(RuntimeError):
+    """A fit produced non-finite parameters/loss (NaN residuals at every
+    iterate, singular ``JtJ``) and no finite multi-start rescued it.  The
+    online refit pipeline (``repro.core.runtime``) catches this and keeps
+    serving the last-good model instead of adopting a poisoned one."""
 
 
 def _softplus(x):
@@ -128,6 +137,23 @@ def levenberg_marquardt(residual_fn, theta0, max_iters: int = 200,
     """Classic LM with multiplicative damping; fixed-shape, jit-friendly.
 
     residual_fn: theta -> residual vector r; minimizes ||r||^2.
+
+    Hardened against degenerate inputs (the online-refit failure modes):
+
+      * a non-finite step (singular ``JtJ``, NaN residuals/Jacobian) is
+        replaced by a zero step, so the iterate can never *become*
+        non-finite — candidate evaluation simply keeps rejecting;
+      * a candidate is accepted only when its loss is FINITE; a finite
+        candidate also rescues a non-finite starting loss (the old
+        ``accept = new < prev`` was vacuously False forever once ``prev``
+        was NaN, silently burning ``max_iters`` and returning
+        ``converged`` semantics that lied);
+      * the returned ``converged`` flag additionally requires the final
+        theta and loss to be finite, so callers can trust
+        ``converged=True`` means "a real minimum of a real function".
+
+    Returns ``(theta, loss, iterations, converged)`` with ``theta`` always
+    finite (non-finite entries of ``theta0`` itself are zeroed on entry).
     """
     jac = jax.jacfwd(residual_fn)
 
@@ -148,9 +174,13 @@ def levenberg_marquardt(residual_fn, theta0, max_iters: int = 200,
         # LM step: (JtJ + mu*diag(JtJ)) delta = -g
         damp = mu * jnp.diag(jnp.maximum(jnp.diag(JtJ), 1e-10))
         delta = jnp.linalg.solve(JtJ + damp, -g)
+        # singular JtJ / NaN residuals: never let a non-finite step reach theta
+        delta = jnp.where(jnp.all(jnp.isfinite(delta)), delta,
+                          jnp.zeros_like(delta))
         cand = theta + delta
         new = loss(cand)
-        accept = new < prev
+        accept = jnp.isfinite(new) & jnp.where(jnp.isfinite(prev),
+                                               new < prev, True)
         theta = jnp.where(accept, cand, theta)
         cur = jnp.where(accept, new, prev)
         mu = jnp.where(accept, jnp.maximum(mu / 3.0, 1e-12), jnp.minimum(mu * 2.0, 1e8))
@@ -158,10 +188,42 @@ def levenberg_marquardt(residual_fn, theta0, max_iters: int = 200,
         return i + 1, theta, mu, cur, done
 
     theta0 = jnp.asarray(theta0, jnp.result_type(float))
+    theta0 = jnp.where(jnp.isfinite(theta0), theta0, jnp.zeros_like(theta0))
     state = (jnp.asarray(0), theta0, jnp.asarray(mu0, theta0.dtype),
              loss(theta0), jnp.asarray(False))
     i, theta, mu, final, done = jax.lax.while_loop(cond, body, state)
-    return theta, final, i, done
+    converged = done & jnp.all(jnp.isfinite(theta)) & jnp.isfinite(final)
+    return theta, final, i, converged
+
+
+@functools.partial(jax.jit, static_argnames=("family", "max_iters"))
+def _fit_kernel(t, y, L, *, family: str, max_iters: int):
+    """One jitted multi-start fit: every init's LM run plus the best-LSE
+    selection, cached per ``(family, data shape, max_iters)``.  The online
+    refit loop calls :func:`fit_samples` once per ``refit_every``
+    observations on a fixed-size window, so after the first trace a refit
+    costs only the compiled while_loop — the eager path re-traced the LM
+    graph (~1 s) on every single refit.
+
+    Selection matches the historical eager loop: non-finite final losses
+    rank last (NaN previously compared False against everything, freezing
+    ``best`` on the first init), ties keep the earliest init.
+    """
+    fam = FAMILIES[family]
+
+    def residual(theta):
+        d = fam.build(theta, L)
+        r = _model_cdf(d)(t) - y
+        return jnp.concatenate([r, fam.boundary(d)])
+
+    runs = [levenberg_marquardt(residual, init(t, y, L), max_iters=max_iters)
+            for init in (fam.theta0, *fam.extra_theta0)]
+    thetas, losses, iters, convs = (jnp.stack(xs) for xs in zip(*runs))
+    best = jnp.argmin(jnp.where(jnp.isfinite(losses), losses, jnp.inf))
+    theta = thetas[best]
+    d = fam.build(theta, L)
+    data_r = _model_cdf(d)(t) - y
+    return theta, jnp.sum(data_r * data_r), iters[best], convs[best]
 
 
 def fit(family: str, t, y, L=DEADLINE_HOURS, max_iters: int = 200) -> FitResult:
@@ -170,28 +232,39 @@ def fit(family: str, t, y, L=DEADLINE_HOURS, max_iters: int = 200) -> FitResult:
     t = jnp.asarray(t, jnp.result_type(float))
     y = jnp.asarray(y, t.dtype)
     L = jnp.asarray(L, t.dtype)
-
-    def residual(theta):
-        d = fam.build(theta, L)
-        r = _model_cdf(d)(t) - y
-        return jnp.concatenate([r, fam.boundary(d)])
-
-    best = None
-    for init in (fam.theta0, *fam.extra_theta0):
-        theta, lse_v, iters, done = levenberg_marquardt(residual, init(t, y, L),
-                                                        max_iters=max_iters)
-        if best is None or float(lse_v) < float(best[1]):
-            best = (theta, lse_v, iters, done)
-    theta, _, iters, done = best
-    d = fam.build(theta, L)
-    data_r = _model_cdf(d)(t) - y
-    return FitResult(dist=d, theta=theta, lse=jnp.sum(data_r * data_r),
+    theta, lse_v, iters, done = _fit_kernel(t, y, L, family=family,
+                                            max_iters=int(max_iters))
+    return FitResult(dist=fam.build(theta, L), theta=theta, lse=lse_v,
                      iterations=iters, converged=done)
 
 
 def fit_samples(family: str, samples, L=DEADLINE_HOURS, **kw) -> FitResult:
-    """Fit directly to a lifetime trace via its empirical CDF."""
-    emp = Empirical.from_samples(samples, L=L)
+    """Fit directly to a lifetime trace via its empirical CDF.
+
+    Degenerate traces are rejected with ``ValueError`` rather than handed to
+    the optimizer (whose least-squares target would be meaningless and whose
+    iterates used to walk into NaN): an empty trace, any non-finite
+    lifetime, a constant trace (zero-spread empirical CDF), and a trace
+    whose every lifetime sits at the deadline cap ``L`` (pure provider
+    reclamation — nothing for the soft Eq. 1 phases to fit).
+    """
+    s = np.asarray(samples, np.float64).ravel()
+    if s.size == 0:
+        raise ValueError("fit_samples: empty lifetime trace")
+    if not np.all(np.isfinite(s)):
+        raise ValueError(
+            f"fit_samples: {int((~np.isfinite(s)).sum())}/{s.size} "
+            f"non-finite lifetimes in trace")
+    if np.all(s >= float(L) - 1e-9):
+        raise ValueError(
+            "fit_samples: every lifetime sits at the deadline cap "
+            f"L={float(L):g} h; the empirical CDF is a single atom and "
+            "Eq. 1's soft phases are unidentifiable")
+    if np.ptp(s) == 0.0:
+        raise ValueError(
+            f"fit_samples: constant trace (all lifetimes == {s[0]:g} h); "
+            "a zero-spread empirical CDF cannot constrain the fit")
+    emp = Empirical.from_samples(s, L=L)
     return fit(family, emp.knots, emp.values, L=L, **kw)
 
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -56,6 +56,9 @@ class OnlineModelTracker:
     ks_alpha: float = 0.01
     min_samples: int = 64
     prior: Optional[object] = None  # distribution used before enough data
+    # injectable fit (signature of fitting.fit_samples); the closed-loop
+    # runtime routes refits through its fault-injection/validation envelope
+    fit_fn: Optional[Callable] = None
 
     def __post_init__(self):
         self._obs = deque(maxlen=self.window)
@@ -82,7 +85,28 @@ class OnlineModelTracker:
             return self.ks_threshold
         return ks_critical_value(self.ks_alpha, n_recent, self._fit_n)
 
+    def defer_refit(self, n_obs: int):
+        """Back off: no automatic refit for the next ``n_obs`` observations
+        (the runtime's bounded retry-with-backoff after a failed refit —
+        without this, a poisoned window would re-trigger the failing fit on
+        every single observation)."""
+        self._since_fit = self.refit_every - int(n_obs)
+
     def refit(self):
+        """Change-point check + refit on the current window.
+
+        On a CONFIRMED change point the rolling window is first trimmed to
+        the post-change observations (the recent slice the KS test flagged),
+        so the refit tracks the post-drift fleet instead of fitting a blend
+        of pre- and post-drift lifetimes — the old full-window refit needed
+        another ``window`` observations to wash the stale half out.
+
+        Raises :class:`fitting.FitDiverged` when the fit returns non-finite
+        parameters/loss and ``ValueError`` (from ``fit_samples``) on a
+        degenerate window; in both cases the live model is left untouched
+        (last-good), ``change_points`` still records the detection, and the
+        caller decides the retry policy (see ``FleetRuntime``).
+        """
         data = np.asarray(self._obs)
         # change-point check BEFORE refitting: is the live model still
         # consistent with the recent half of the window?
@@ -91,7 +115,15 @@ class OnlineModelTracker:
         self.last_cut = self._cut(len(recent))
         if self.last_ks > self.last_cut and self.n_refits > 0:
             self.change_points += 1
-        res = fitting.fit_samples("constrained", data)
+            # drop pre-drift lifetimes: refit on post-change observations only
+            data = recent
+            self._obs = deque(recent.tolist(), maxlen=self.window)
+        res = (self.fit_fn or fitting.fit_samples)("constrained", data)
+        theta = np.asarray(res.theta, np.float64)
+        if not (np.all(np.isfinite(theta)) and np.isfinite(float(res.lse))):
+            raise fitting.FitDiverged(
+                f"refit on {len(data)} observations produced non-finite "
+                f"theta/loss (theta={theta.tolist()})")
         self.model = res.dist
         self._fit_n = len(data)
         self.n_refits += 1

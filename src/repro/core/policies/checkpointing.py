@@ -111,6 +111,27 @@ class BatchDPTables:
                           age_idx: int = 0) -> float:
         return float(self.V[int(s), int(job_steps), int(age_idx)])
 
+    def validate(self) -> "BatchDPTables":
+        """Reject half-written / diverged tables before they are served.
+
+        The closed-loop runtime calls this between ``solve_batch`` and the
+        atomic table swap: a table passes only if every V entry is finite
+        and non-negative and every K row respects the DP's own invariant
+        (``0 <= K[j] <= j``, with ``K[j] >= 1`` whenever work remains).
+        Raises ``ValueError``; returns ``self`` so calls chain.
+        """
+        if not np.all(np.isfinite(self.V)):
+            raise ValueError("BatchDPTables.validate: non-finite V entries")
+        if np.any(self.V < 0.0):
+            raise ValueError("BatchDPTables.validate: negative makespans in V")
+        j = np.arange(self.K.shape[1])[None, :, None]
+        if np.any(self.K < 0) or np.any(self.K > j):
+            raise ValueError("BatchDPTables.validate: K outside [0, j]")
+        if np.any(self.K[:, 1:, :] < 1):
+            raise ValueError("BatchDPTables.validate: K < 1 with work "
+                             "remaining (j >= 1)")
+        return self
+
 
 @functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
                                              "n_sweeps"))
@@ -198,8 +219,9 @@ def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
 
 @functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
                                              "n_sweeps"))
-def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, *, j_max: int,
-                        t_max: int, delta_steps: int, n_sweeps: int):
+def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
+                        j_max: int, t_max: int, delta_steps: int,
+                        n_sweeps: int):
     """Batched DP solve: ``Fc``/``Hc`` are stacked ``(S, t_max+1)`` grids,
     the result ``(V, K)`` has shapes ``(S, j_max+1, t_max+1)``.
 
@@ -315,8 +337,18 @@ def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, *, j_max: int,
             VK = jax.lax.fori_loop(lo, hi, body_factory(sd, R), VK)
         return VK, None
 
-    v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
-    V_init = jnp.broadcast_to(v0, (S, j_max + 1, T)).astype(jnp.float32)
+    if v_init is None:
+        # cold start: optimistic j*dt (built inside the jit, exactly as the
+        # reference does — the None-vs-array pytree structure gives the warm
+        # path its own trace, so this cold graph stays byte-identical to the
+        # pre-warm-start kernel and the solve/solve_batch bit contract holds)
+        v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
+        V_init = jnp.broadcast_to(v0, (S, j_max + 1, T)).astype(jnp.float32)
+    else:
+        # warm start: seed the restart-cost fixed point with a previously
+        # converged V (the closed-loop runtime hands in the last-good tables
+        # after a drift refit — fewer sweeps reach the same fixed point)
+        V_init = v_init.astype(jnp.float32)
     (V, K), _ = jax.lax.scan(one_sweep,
                              (V_init, jnp.zeros((S, j_max + 1, T), jnp.int32)),
                              None, length=n_sweeps)
@@ -325,7 +357,8 @@ def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, *, j_max: int,
 
 def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
                 delta_steps: int = 1, n_sweeps: int = 3,
-                restart_overhead: float = 0.0) -> BatchDPTables:
+                restart_overhead: float = 0.0,
+                v_init=None) -> BatchDPTables:
     """Solve the checkpointing DP for a whole scenario batch in ONE compiled
     call (see :func:`_solve_tables_batch`).
 
@@ -334,6 +367,11 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     builds it (same eager ops), then the stacked grids go through the
     batched kernel — so every returned slice matches the per-scenario
     :func:`solve` result table-for-table, bit-exactly.
+
+    ``v_init`` optionally warm-starts the restart-cost fixed point from a
+    previous solve's ``V`` array of matching shape ``(S, j_max+1, t_max+1)``
+    (e.g. ``prev.V`` after a drift refit on the same grid) — the cold path
+    (``v_init=None``) is untouched and keeps the bit contract above.
     """
     dists = list(dists)
     if not dists:
@@ -342,6 +380,17 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     if any(abs(float(d.L) - L) > 1e-12 for d in dists[1:]):
         raise ValueError("solve_batch() requires a shared deadline L")
     t_max = int(round(L / grid_dt))
+    if v_init is not None:
+        want = (len(dists), int(job_steps) + 1, t_max + 1)
+        v_init = np.asarray(v_init)
+        if v_init.shape != want:
+            raise ValueError(
+                f"solve_batch(v_init=...): shape {v_init.shape} does not "
+                f"match this solve's tables {want}; warm starts require the "
+                f"same scenario count, job_steps and grid")
+        if not np.all(np.isfinite(v_init)):
+            raise ValueError("solve_batch(v_init=...): non-finite warm start")
+        v_init = jnp.asarray(v_init, jnp.float32)
     tk = jnp.arange(t_max + 1) * grid_dt
     Fcs, Hcs = [], []
     for d in dists:
@@ -353,7 +402,7 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     # f32-pinned scalars: see solve() — keeps V/K identical at any dtype
     V, K = _solve_tables_batch(jnp.stack(Fcs), jnp.stack(Hcs),
                                jnp.float32(grid_dt),
-                               jnp.float32(restart_overhead),
+                               jnp.float32(restart_overhead), v_init,
                                j_max=int(job_steps), t_max=t_max,
                                delta_steps=int(delta_steps),
                                n_sweeps=n_sweeps)

@@ -98,6 +98,10 @@ class Scenario:
     launch_clock: Optional[float] = None  # overrides the phase's clock
     dist_kwargs: Mapping = dataclasses.field(default_factory=dict)
     description: str = ""
+    # a live fitted distribution (e.g. the closed-loop runtime's latest
+    # Eq. 1 refit) served verbatim instead of the catalog resolution —
+    # lets an online model participate in sweeps alongside catalog regimes
+    dist_override: Optional[object] = None
 
     @property
     def clock(self) -> float:
@@ -105,11 +109,14 @@ class Scenario:
             return float(self.launch_clock)
         return PHASE_CLOCKS[self.phase]
 
-    def dist(self) -> dists.DiurnalConstrained:
+    def dist(self):
         """The scenario's resolved lifetime model (full pytree contract, so
         the DP solver, ReuseTable and lifetime pools work unchanged).  The
         zone's capacity-pressure scaling is applied to the type's base
-        Eq. 1 fit before any explicit ``dist_kwargs`` overrides."""
+        Eq. 1 fit before any explicit ``dist_kwargs`` overrides; a
+        ``dist_override`` (a live fitted model) short-circuits all of it."""
+        if self.dist_override is not None:
+            return self.dist_override
         zone = ZONE_PARAMS[self.zone]
         base = dists.VM_TYPE_PARAMS[self.vm_type]
         kw = dict(A=base["A"] * zone["A_scale"],

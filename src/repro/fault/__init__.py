@@ -1,2 +1,4 @@
+from .injection import (FaultEvent, FaultInjector,  # noqa: F401
+                        default_schedule)
 from .preemption import (ElasticPlan, PreemptionEvent, PreemptionSource,
                          StragglerWatchdog, plan_elastic_remesh)  # noqa: F401

@@ -19,8 +19,11 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from ..core import engine
 from ..core.policies import scheduling as sched_policy
 
 WARNING_SECONDS = 30.0  # Google's advance notice
@@ -47,18 +50,20 @@ class PreemptionSource:
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+        # normalize parameter leaves once so every _draw hits the shared
+        # module-level kernel's cache (same pytree structure/dtype) instead
+        # of re-tracing per source instance
+        self._dist_n = jax.tree_util.tree_map(
+            lambda l: jnp.asarray(l, jnp.result_type(float)), self.dist)
+        self._fl = float(self.dist.cdf(self.dist.L))
         self.launch_age = np.zeros(self.n_pods)       # run-clock at pod launch
         self.lifetimes = self._draw(self.n_pods)
         self.preempted = np.zeros(self.n_pods, bool)
 
     def _draw(self, n):
-        import jax.numpy as jnp
         u = self._rng.uniform(size=n)
-        fl = float(self.dist.cdf(self.dist.L))
-        t = np.array(self.dist.icdf(jnp.minimum(jnp.asarray(u),
-                                                fl * (1 - 1e-6))))
-        t[u >= fl] = float(self.dist.L)
-        return t
+        return engine.capped_icdf_draw(self._dist_n, u, self._fl,
+                                       float(self.dist.L))
 
     def pod_age(self, pod_id: int, now_hours: float) -> float:
         return now_hours - self.launch_age[pod_id]

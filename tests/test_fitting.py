@@ -97,3 +97,58 @@ def test_levenberg_marquardt_on_rosenbrock_style():
     theta, loss, iters, done = F.levenberg_marquardt(residual,
                                                      jnp.asarray([-1.2, 1.0]))
     np.testing.assert_allclose(np.asarray(theta), [1.0, 1.0], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hardening: non-finite traces must never propagate silently
+# ---------------------------------------------------------------------------
+
+def test_lm_nan_residuals_stay_finite_and_unconverged():
+    """A residual that is NaN everywhere (the singular-JtJ / poisoned-data
+    trace): LM must return FINITE theta with converged=False, not walk the
+    iterate into NaN while `accept = new < prev` stays vacuously False."""
+    theta0 = jnp.array([1.0, 2.0])
+    nan_res = lambda th: jnp.full((3,), jnp.nan) * th[0]
+    theta, loss, iters, conv = F.levenberg_marquardt(nan_res, theta0,
+                                                     max_iters=24)
+    assert np.all(np.isfinite(np.asarray(theta)))
+    assert not bool(conv)
+
+
+def test_lm_nan_theta0_is_sanitized():
+    res = lambda th: th - jnp.array([1.0, 2.0])
+    theta, loss, iters, conv = F.levenberg_marquardt(
+        res, jnp.array([jnp.nan, 0.0]), max_iters=100)
+    assert np.all(np.isfinite(np.asarray(theta)))
+    assert bool(conv)
+    np.testing.assert_allclose(np.asarray(theta), [1.0, 2.0], atol=1e-4)
+
+
+def test_lm_singular_jtj_zero_jacobian():
+    """Constant residuals give a singular JtJ (zero Jacobian): the solve's
+    NaN step must be replaced by a zero step, leaving theta0 intact."""
+    res = lambda th: jnp.ones((3,)) + 0.0 * th.sum()
+    theta, loss, iters, conv = F.levenberg_marquardt(
+        res, jnp.array([0.5, -0.5]), max_iters=16)
+    assert np.all(np.isfinite(np.asarray(theta)))
+    np.testing.assert_allclose(np.asarray(theta), [0.5, -0.5])
+
+
+def test_fit_samples_rejects_degenerate_traces():
+    with pytest.raises(ValueError, match="empty"):
+        F.fit_samples("constrained", [])
+    with pytest.raises(ValueError, match="non-finite"):
+        F.fit_samples("constrained", [1.0, np.nan, 3.0])
+    with pytest.raises(ValueError, match="constant"):
+        F.fit_samples("constrained", np.full(64, 3.25))
+    with pytest.raises(ValueError, match="deadline cap"):
+        F.fit_samples("constrained", np.full(64, 24.0))
+
+
+def test_fit_survives_nan_free_but_extreme_trace():
+    """A legal but extreme trace (storm survivors: all tiny lifetimes with
+    spread) must produce a finite fit, never NaN parameters."""
+    rng = np.random.default_rng(0)
+    res = F.fit_samples("constrained", rng.uniform(0.01, 0.05, size=96))
+    assert np.all(np.isfinite(np.asarray(res.theta)))
+    assert np.isfinite(float(res.lse))

@@ -86,3 +86,64 @@ def test_tracker_legacy_fixed_threshold():
         trk.observe(x)
     assert trk.last_cut == pytest.approx(0.4)
     assert trk.change_points == 0
+
+
+def test_change_point_trims_window_refit_matches_post_drift():
+    """Satellite regression: on a confirmed change point the rolling window
+    is trimmed to the post-change slice, so the refitted model tracks the
+    POST-drift fleet — not a blend of pre- and post-drift lifetimes (the
+    old full-window refit's failure mode)."""
+    from repro.core import fitting
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(11), 3)
+    gentle = np.asarray(S.ground_truth_for("n1-highcpu-2").sample(k1, (384,)))
+    harsh = np.asarray(S.ground_truth_for("n1-highcpu-32").sample(k2, (384,)))
+    trk = OnlineModelTracker(min_samples=128, refit_every=128, window=384)
+    for x in gentle:
+        trk.observe(x)
+    for i, x in enumerate(harsh):
+        trk.observe(x)
+        if trk.change_points:
+            break
+    assert trk.change_points >= 1, "phase flip must be detected"
+    assert len(trk._obs) < 384, "window must be trimmed at the change point"
+    for x in harsh[i + 1:]:
+        trk.observe(x)
+    # reference blend: what the old un-trimmed refit would have fitted at
+    # detection time — half stale gentle lifetimes, half harsh
+    blend = fitting.fit_samples(
+        "constrained", np.concatenate([gentle[-192:], harsh[:192]]))
+    probe = np.asarray(S.ground_truth_for("n1-highcpu-32").sample(k3, (512,)))
+    ks_model = float(fitting.ks_statistic(trk.model, probe))
+    ks_blend = float(fitting.ks_statistic(blend.dist, probe))
+    assert ks_model < ks_blend, \
+        f"refit must match the post-drift fleet (ks {ks_model:.3f}) better " \
+        f"than a pre/post blend (ks {ks_blend:.3f})"
+
+
+def test_tracker_keeps_last_good_model_on_fit_failure():
+    """An injected diverging fit raises FitDiverged and must leave the live
+    model untouched; defer_refit then backs the next attempt off."""
+    from repro.core import fitting
+
+    calls = {"n": 0}
+
+    def poisoned(family, data, **kw):
+        calls["n"] += 1
+        return fitting.FitResult(dist=None, theta=np.full(3, np.nan),
+                                 lse=np.nan, iterations=0, converged=False)
+
+    gt = S.ground_truth_for("n1-highcpu-16")
+    samples = np.asarray(gt.sample(jax.random.PRNGKey(5), (80,)))
+    trk = OnlineModelTracker(min_samples=64, refit_every=64, fit_fn=poisoned)
+    before = trk.model
+    raised = 0
+    for x in samples:
+        try:
+            trk.observe(x)
+        except fitting.FitDiverged:
+            raised += 1
+            trk.defer_refit(8)
+    assert raised >= 1 and calls["n"] >= 1
+    assert trk.model is before, "last-good model must keep serving"
+    assert trk.n_refits == 0
