@@ -27,7 +27,7 @@ separately (``batch_vs_serial``, continued from schema 2).
 
 ``BENCH_scenarios.json`` (repo root, see docs/bench_schemas.md) records::
 
-    {"schema": 3, "mode": "full"|"quick", "generated_unix": ...,
+    {"schema": 4, "mode": "full"|"quick", "generated_unix": ...,
      "grid": {...},
      "checkpointing": {"workload": {...}, "wall_clock_s": ...,
                        "rows": [...one-kernel per-cell makespan stats...]},
@@ -44,7 +44,9 @@ separately (``batch_vs_serial``, continued from schema 2).
                                   "x64_check_n_trials": ...}},
      "batch_vs_serial": {"n_scenarios": ..., "solver": {...}, "pool": {...},
                          "combined_speedup": ..., "dp_values_bitexact": ...},
-     "summary": {...Obs. 5 ratios + one_kernel_combined_speedup...}}
+     "solver": {...solver_bench.measure: plain-XLA vs coarse-to-fine wall
+                clock, speedup, verification + bit-agreement (schema 4)...},
+     "summary": {...Obs. 5 ratios + one_kernel/solver speedups...}}
 
 ``--quick`` (or run(quick=True)) shrinks trials/steps so the module finishes
 fast; the JSON records which mode produced it.
@@ -320,6 +322,17 @@ def run(quick: bool = False):
          f"combined={bvs['combined_speedup']:.2f}x;"
          f"dp_bitexact={bvs['dp_values_bitexact']}")
 
+    # solver backend block (schema 4): plain XLA vs coarse-to-fine at this
+    # sweep's own workload — the cross-PR solver wall-clock trajectory
+    from . import solver_bench
+    solver = solver_bench.measure(dist_list, job_steps=job_steps,
+                                  grid_dt=ck_workload["grid_dt"])
+    emit(f"scenarios/solver_ctf_S{len(grid)}",
+         solver["refine_s"] / len(grid) * 1e6,
+         f"xla_s={solver['xla_s']:.2f};refine_s={solver['refine_s']:.2f};"
+         f"speedup={solver['speedup']:.2f}x;"
+         f"bitexact={solver['bit_identical_to_plain']}")
+
     n_jobs = 20 if quick else 60
     cluster_sizes = (8,) if quick else (16,)
     t0 = time.perf_counter()
@@ -341,7 +354,7 @@ def run(quick: bool = False):
     night_fr = _phase_mean(sv_rows, "night", "job_failure_rate",
                            policy="model")
     payload = {
-        "schema": 3,
+        "schema": 4,
         "mode": "quick" if quick else "full",
         "generated_unix": time.time(),
         "grid": {"zones": list(ZONES), "phases": list(PHASES),
@@ -358,6 +371,7 @@ def run(quick: bool = False):
             "wall_clock_s": t_sv, "rows": sv_rows},
         "one_kernel": onek,
         "batch_vs_serial": bvs,
+        "solver": solver,
         "summary": {
             # Obs. 5 headline: night launches preempt less (< 1).  Makespan
             # need not follow — night failures arrive later in a VM's life,
@@ -370,7 +384,8 @@ def run(quick: bool = False):
             "cost_reduction_mean": red,
             "one_kernel_combined_speedup":
                 ps["combined_speedup_vs_pr3"],
-            "batched_combined_speedup": bvs["combined_speedup"]},
+            "batched_combined_speedup": bvs["combined_speedup"],
+            "solver_ctf_speedup": solver["speedup"]},
     }
     write_bench_json("BENCH_scenarios.json", payload, emit_as="scenarios/json")
 

@@ -1,0 +1,91 @@
+"""DP solver backend benchmark (``--only solver``).
+
+Times the pluggable ``checkpointing.solve_batch`` backends on the standard
+S=8 scenario grid: the plain XLA production solve against the coarse-to-fine
+refinement (``refine=True`` — coarse hint solve, cone/cap-pruned pre-sweeps,
+one full-resolution sweep), verifying bit-agreement alongside the timings.
+The measurement doubles as the ``"solver"`` block of ``BENCH_scenarios.json``
+schema 4 (``scenario_sweep`` embeds :func:`measure`), which is where the
+cross-PR >= 2x solver wall-clock criterion is recorded.
+
+Timings are warm (post-compile): the sweep regime this matters for re-solves
+the same workload shape on every market refit, so compile cost amortizes
+away; ``solve_compile_s`` records it separately.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import scenarios as SC
+from repro.core.policies import checkpointing as ckpt
+
+from .common import emit
+
+REPS = 3
+
+
+def measure(dist_list, *, job_steps: int, grid_dt: float,
+            n_sweeps: int = 3) -> dict:
+    """The schema-4 ``"solver"`` block: plain-vs-refined wall clock (warm,
+    best of ``REPS``), verification state and bit-agreement."""
+    S = len(dist_list)
+
+    t0 = time.perf_counter()
+    plain = ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt,
+                             n_sweeps=n_sweeps)
+    compile_s = time.perf_counter() - t0
+    refined = ckpt.solve_batch(dist_list, job_steps, grid_dt=grid_dt,
+                               n_sweeps=n_sweeps, refine=True)
+
+    def best(run):
+        times = []
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            out = run()
+            times.append(time.perf_counter() - t0)
+        return out, min(times)
+
+    plain, plain_s = best(lambda: ckpt.solve_batch(
+        dist_list, job_steps, grid_dt=grid_dt, n_sweeps=n_sweeps))
+    refined, refine_s = best(lambda: ckpt.solve_batch(
+        dist_list, job_steps, grid_dt=grid_dt, n_sweeps=n_sweeps,
+        refine=True))
+
+    info = refined.refine_info or {}
+    return {
+        "n_scenarios": S,
+        "workload": {"job_steps": job_steps, "grid_dt": grid_dt,
+                     "n_sweeps": n_sweeps},
+        "xla_s": plain_s,
+        "refine_s": refine_s,
+        "speedup": plain_s / refine_s,
+        "solve_compile_s": compile_s,
+        "refine_info": {k: info.get(k) for k in
+                        ("applied", "verified_col0", "fallback", "factor",
+                         "radius", "caps")},
+        "bit_identical_to_plain": bool(
+            np.array_equal(plain.V, refined.V)
+            and np.array_equal(plain.K, refined.K)),
+    }
+
+
+def run(quick: bool = False):
+    grid = SC.default_grid()
+    dist_list = [sc.dist() for sc in grid]
+    job_steps = 120 if quick else 300
+    block = measure(dist_list, job_steps=job_steps, grid_dt=1.0 / 60.0)
+    emit(f"solver/ctf_S{len(dist_list)}_J{job_steps}",
+         block["refine_s"] / len(dist_list) * 1e6,
+         f"xla_s={block['xla_s']:.2f};refine_s={block['refine_s']:.2f};"
+         f"speedup={block['speedup']:.2f}x;"
+         f"verified={block['refine_info']['verified_col0']};"
+         f"fallback={block['refine_info']['fallback']};"
+         f"bitexact={block['bit_identical_to_plain']}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

@@ -23,9 +23,14 @@ Faithfulness notes (see DESIGN.md §6):
     (integral of x f(x) dx, an *absolute-age* moment) is dimensionally a
     makespan, not a lost-work, term.
 
-The solver is one jitted ``lax.fori_loop`` over j (vectorized over VM age and
-candidate interval); schedule extraction and the Monte-Carlo executor used by
-Fig. 7 live below it.
+The solver dispatches to a pluggable backend package
+(``repro.core.policies.solver_backends``; see ``docs/solver.md``): the
+retained serial reference, the batched XLA kernel, a Pallas VMEM-resident
+kernel (``repro.kernels.dp_recurrence``), and a coarse-to-fine refinement
+pipeline (``refine=True``), optionally ``shard_map``-sharded over the
+``scenario`` logical axis when a ``repro.sharding`` mesh is active.
+Schedule extraction and the Monte-Carlo executor used by Fig. 7 live below
+the dispatchers.
 
 Bit-exactness contract (what each batched kernel must reproduce)
 ----------------------------------------------------------------
@@ -34,13 +39,16 @@ side is retained forever, and restructuring the production side is only
 legal while these matches hold (enforced by ``tests/test_batched.py`` /
 ``tests/test_sim_engine.py``):
 
-  * :func:`solve_batch` vs the per-scenario :func:`solve` — V *and* K
-    bit-identical per scenario slice at the solver's native float32, at any
-    session dtype: both build their ``Fc``/``Hc`` grids with the same eager
-    ops and the batched kernel keeps the reference expression tree
-    (hoisting, column-patching and argmin-restructuring may reorder the
-    schedule, never the per-element arithmetic, so XLA's FMA contraction
-    stays identical).
+  * :func:`solve_batch` (``backend="xla"``, and the coarse-to-fine pipeline
+    when its verification holds) vs the per-scenario :func:`solve` — V
+    *and* K bit-identical per scenario slice at the solver's native
+    float32, at any session dtype: both build their ``Fc``/``Hc`` grids
+    through one shared helper (:func:`_cdf_grids`) and the batched kernel
+    keeps the reference expression tree (hoisting, column-patching and
+    argmin-restructuring may reorder the schedule, never the per-element
+    arithmetic, so XLA's FMA contraction stays identical).  The Pallas
+    backend is the deliberate exception: it recomputes the probability
+    grids in-kernel and is tolerance-tested instead.
   * The vectorized executor ``engine.simulate_makespan_batch`` vs
     :func:`simulate_makespan` (the per-trial Python loop kept at the bottom
     of this file) — bit-identical makespans on a shared pre-drawn pool with
@@ -55,14 +63,20 @@ legal while these matches hold (enforced by ``tests/test_batched.py`` /
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-_EPS = 1e-9
+from . import solver_backends
+from .solver_backends import refine as _refine
+from .solver_backends.grids import _EPS, cdf_grids as _cdf_grids  # noqa: F401
+
+# retained names for the two kernels this module used to define inline; the
+# implementations moved to the backend package unchanged
+_solve_tables = solver_backends.reference.solve_tables
+_solve_tables_batch = solver_backends.xla.solve_tables_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +111,10 @@ class BatchDPTables:
     delta_steps: int
     restart_overhead: float
     horizon_idx: int
+    # provenance (not part of table identity): which backend produced the
+    # tables and, for refine=True, what the refinement pipeline did
+    backend: str = "xla"
+    refine_info: Optional[dict] = None
 
     def __len__(self) -> int:
         return self.V.shape[0]
@@ -133,240 +151,157 @@ class BatchDPTables:
         return self
 
 
-@functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
-                                             "n_sweeps"))
-def _solve_tables(Fc, Hc, grid_dt, restart_overhead, *, j_max: int, t_max: int,
-                  delta_steps: int, n_sweeps: int):
-    """Returns (V, K) of shapes (j_max+1, t_max+1)."""
-    dt = grid_dt
-    t_idx = jnp.arange(t_max + 1)
-    i_ax = jnp.arange(1, j_max + 1)                      # candidate intervals
-    Sc = 1.0 - Fc
-    dead = Sc < 1e-6
-
-    def one_sweep(carry, _):
-        V_prev, _ = carry
-        # restart cost per remaining length j (uses previous sweep's V[:, 0])
-        R = restart_overhead + V_prev[:, 0]              # (j_max+1,)
-
-        def body(j, VK):
-            V, K = VK
-            valid = i_ax <= j                             # (I,)
-            final = i_ax == j                             # no checkpoint on last segment
-            w = jnp.where(final, i_ax, i_ax + delta_steps)  # (I,)
-            end = jnp.clip(t_idx[:, None] + w[None, :], 0, t_max)  # (T, I)
-            Ft = Fc[t_idx][:, None]
-            Fe = Fc[end]
-            St = jnp.maximum(1.0 - Ft, _EPS)
-            p_fail = jnp.clip((Fe - Ft) / St, 0.0, 1.0)
-            p_succ = 1.0 - p_fail
-            # E[x - t | fail in (t, te]] via H(t) = int_0^t x dF~ (atom incl.)
-            dF = jnp.maximum(Fe - Ft, _EPS)
-            e_lost = (Hc[end] - Hc[t_idx][:, None]) / dF - t_idx[:, None] * dt
-            e_lost = jnp.clip(e_lost, 0.0, w[None, :] * dt)
-            v_succ = w[None, :] * dt + V[j - i_ax[None, :], end]
-            v_fail = e_lost + R[j]
-            cost = p_succ * v_succ + p_fail * v_fail
-            cost = jnp.where(valid[None, :], cost, jnp.inf)
-            vj = jnp.min(cost, axis=1)
-            kj = jnp.argmin(cost, axis=1) + 1
-            # dead VM (age >= horizon): must restart
-            vj = jnp.where(dead, R[j], vj)
-            kj = jnp.where(dead, jnp.minimum(j, j_max), kj)
-            V = V.at[j].set(vj.astype(V.dtype))
-            K = K.at[j].set(kj.astype(K.dtype))
-            return V, K
-
-        V0 = jnp.zeros((j_max + 1, t_max + 1), jnp.float32)
-        K0 = jnp.zeros((j_max + 1, t_max + 1), jnp.int32)
-        V, K = jax.lax.fori_loop(1, j_max + 1, body, (V0, K0))
-        return (V, K), None
-
-    # sweep 0 restart estimate: optimistic j*dt
-    V_init = jnp.broadcast_to((jnp.arange(j_max + 1) * dt)[:, None],
-                              (j_max + 1, t_max + 1)).astype(jnp.float32)
-    (V, K), _ = jax.lax.scan(one_sweep, (V_init, jnp.zeros_like(V_init, jnp.int32)),
-                             None, length=n_sweeps)
-    return V, K
-
-
 def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
           delta_steps: int = 1, n_sweeps: int = 3,
-          restart_overhead: float = 0.0) -> DPTables:
+          restart_overhead: float = 0.0, backend: str = "auto") -> DPTables:
     """Solve the checkpointing DP for jobs up to ``job_steps`` grid steps on
-    VMs following ``dist`` (any repro.core.distributions family)."""
-    L = float(dist.L)
-    t_max = int(round(L / grid_dt))
-    tk = jnp.arange(t_max + 1) * grid_dt
-    F_raw = jnp.clip(dist.cdf(tk), 0.0, 1.0)
-    atom = jnp.maximum(1.0 - F_raw[-1], 0.0)             # provider kill at L
-    Fc = F_raw.at[-1].set(1.0)
-    H_raw = dist.partial_expectation(jnp.zeros_like(tk), tk)
-    Hc = H_raw.at[-1].add(atom * L)                      # include the L-atom
-    # scalars pinned to the solver's native f32: a python float would trace
-    # as weak f64 under x64 and shift parts of the DP arithmetic to f64,
-    # where the reference and batched kernels round differently — pinning
-    # keeps solve/solve_batch bit-identical to each other at any session
-    # dtype
-    V, K = _solve_tables(Fc.astype(jnp.float32), Hc.astype(jnp.float32),
-                         jnp.float32(grid_dt), jnp.float32(restart_overhead),
-                         j_max=int(job_steps), t_max=t_max,
-                         delta_steps=int(delta_steps), n_sweeps=n_sweeps)
+    VMs following ``dist`` (any repro.core.distributions family).
+
+    ``backend="auto"`` runs the serial reference kernel: the single-scenario
+    path IS the reference side of the bit-exactness contract, so rerouting
+    it through a production kernel would collapse the very pairing
+    ``tests/test_batched.py`` enforces (``REPRO_SOLVER_BACKEND`` therefore
+    does not apply here).  An explicit ``"xla"``/``"pallas"`` routes through
+    the batched machinery with ``S=1`` and unwraps.
+    """
+    Fc, Hc, t_max = _cdf_grids(dist, grid_dt)
+    # scalars pinned to the solver's native f32 (see _cdf_grids): keeps
+    # solve/solve_batch bit-identical to each other at any session dtype
+    gdt, ro = jnp.float32(grid_dt), jnp.float32(restart_overhead)
+    if backend in ("auto", "reference"):
+        V, K = _solve_tables(Fc, Hc, gdt, ro, j_max=int(job_steps),
+                             t_max=t_max, delta_steps=int(delta_steps),
+                             n_sweeps=n_sweeps)
+    else:
+        name = solver_backends.resolve(backend)
+        V, K = _dispatch_plain(name, Fc[None], Hc[None], gdt, ro, None,
+                               j_max=int(job_steps), t_max=t_max,
+                               delta_steps=int(delta_steps),
+                               n_sweeps=n_sweeps)
+        V, K = V[0], K[0]
     return DPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                     delta_steps=int(delta_steps),
                     restart_overhead=restart_overhead, horizon_idx=t_max)
 
 
-@functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
-                                             "n_sweeps"))
-def _solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
-                        j_max: int, t_max: int, delta_steps: int,
-                        n_sweeps: int):
-    """Batched DP solve: ``Fc``/``Hc`` are stacked ``(S, t_max+1)`` grids,
-    the result ``(V, K)`` has shapes ``(S, j_max+1, t_max+1)``.
-
-    Per scenario slice this is BIT-IDENTICAL to :func:`_solve_tables` (the
-    retained reference kernel) — the per-candidate arithmetic keeps the
-    reference expression tree so XLA's FMA contraction matches — while
-    restructuring the loop body for throughput:
-
-      * the (VM age x candidate interval) grids ``p_fail``/``e_lost`` are
-        j-invariant, so they are hoisted out of the 900-iteration loop (the
-        reference recomputes them, with two ``(T, I)`` gathers and three
-        divisions, every iteration);
-      * only the final-segment candidate ``i == j`` (no trailing checkpoint,
-        ``w = i``) differs per j, so it is patched as a single column
-        instead of re-selecting full ``w``/``end`` grids;
-      * ``argmin`` is computed as a min-reduce plus a first-match max-reduce
-        (XLA CPU's variadic argmin reduce was half the body's wall-clock);
-      * the j loop runs in three segments (thirds of the remaining-work
-        axis) so early rows do not scan the full candidate axis; all
-        segments share column-prefix views of one precomputed grid set.
-    """
-    dt = grid_dt
-    T = t_max + 1
-    t_idx = jnp.arange(T)
-    S = Fc.shape[0]
-    Sc = 1.0 - Fc
-    dead = Sc < 1e-6                                      # (S, T)
-    if j_max >= 24:    # keep every segment SIMD-wide: a very narrow cost
-        j1 = (j_max + 1) // 3           # matrix compiles to different (ULP-
-        j2 = 2 * (j_max + 1) // 3       # shifting) scalar codegen
-        segs = [(j1, 1, j1 + 1), (j2, j1 + 1, j2 + 1),
-                (j_max, j2 + 1, j_max + 1)]
-    else:
-        segs = [(j_max, 1, j_max + 1)]
-
-    i_full = jnp.arange(1, j_max + 1)
-
-    def grids(Fc1, Hc1, w):
-        # identical per-element arithmetic to the reference body
-        end = jnp.clip(t_idx[:, None] + w[None, :], 0, t_max)
-        Ft = Fc1[t_idx][:, None]
-        Fe = Fc1[end]
-        St = jnp.maximum(1.0 - Ft, _EPS)
-        p_fail = jnp.clip((Fe - Ft) / St, 0.0, 1.0)
-        dF = jnp.maximum(Fe - Ft, _EPS)
-        e_lost = (Hc1[end] - Hc1[t_idx][:, None]) / dF - t_idx[:, None] * dt
-        e_lost = jnp.clip(e_lost, 0.0, w[None, :] * dt)
-        return p_fail, e_lost, end
-
-    pf_nf_f, el_nf_f, end_nf_f = jax.vmap(
-        lambda f, h: grids(f, h, i_full + delta_steps))(Fc, Hc)
-    pf_fd_f, el_fd_f, end_fd_f = jax.vmap(
-        lambda f, h: grids(f, h, i_full))(Fc, Hc)
-
-    def make_seg_views(I_len):
-        # a shorter candidate axis is a column prefix of the full grids
-        # (column i's values depend only on i), so segments share one
-        # precomputed set; end grids are parameter-independent (one copy)
-        return (i_full[:I_len], i_full[:I_len] + delta_steps,
-                pf_nf_f[:, :, :I_len], el_nf_f[:, :, :I_len],
-                pf_fd_f[:, :, :I_len], el_fd_f[:, :, :I_len],
-                end_nf_f[0][:, :I_len], end_fd_f[0][:, :I_len])
-
-    seg_data = [make_seg_views(I) for I, _, _ in segs]
-
-    def body_factory(sd, R):
-        i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
-        I_len = int(i_ax.shape[0])
-
-        def body(j, VK):
-            V, K = VK
-            valid = i_ax <= j
-
-            def one(V1, pf1, el1, pffd1, elfd1, Rj1):
-                Vg = V1[(j - i_ax)[None, :], end_nf]
-                v_succ = w_nf[None, :] * dt + Vg
-                v_fail = el1 + Rj1
-                cost = (1.0 - pf1) * v_succ + pf1 * v_fail
-                # final-segment candidate i == j: w = i, V[j-i] == V[0]
-                colV = V1[0, end_fd[:, j - 1]]
-                vs_f = jnp.asarray(j, cost.dtype) * dt + colV
-                cost_f = (1.0 - pffd1[:, j - 1]) * vs_f \
-                    + pffd1[:, j - 1] * (elfd1[:, j - 1] + Rj1)
-                cost = jax.lax.dynamic_update_slice(cost, cost_f[:, None],
-                                                    (0, j - 1))
-                costm = jnp.where(valid[None, :], cost, jnp.inf)
-                vj = jnp.min(costm, axis=1)
-                # first-match argmin: maximize (I_len - idx) over the minima
-                eq = (costm == vj[:, None]) & valid[None, :]
-                payload = jnp.where(eq, I_len - jnp.arange(I_len)[None, :], 0)
-                kj = (I_len + 1 - jnp.max(payload, axis=1)).astype(jnp.int32)
-                return vj, kj
-
-            vj, kj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd,
-                                   R[:, j][:, None])
-            vj = jnp.where(dead, R[:, j][:, None], vj)
-            kj = jnp.where(dead, jnp.minimum(j, j_max), kj)
-            V = jax.vmap(lambda V1, r: jax.lax.dynamic_update_slice(
-                V1, r[None, :], (j, 0)))(V, vj.astype(V.dtype))
-            K = jax.vmap(lambda K1, r: jax.lax.dynamic_update_slice(
-                K1, r[None, :], (j, 0)))(K, kj)
-            return V, K
-
-        return body
-
-    def one_sweep(carry, _):
-        V_prev, _ = carry
-        R = restart_overhead + V_prev[:, :, 0]            # (S, j_max+1)
-        V0 = jnp.zeros((S, j_max + 1, T), jnp.float32)
-        K0 = jnp.zeros((S, j_max + 1, T), jnp.int32)
-        VK = (V0, K0)
-        for sd, (_, lo, hi) in zip(seg_data, segs):
-            VK = jax.lax.fori_loop(lo, hi, body_factory(sd, R), VK)
-        return VK, None
-
+def _dispatch_plain(name: str, Fc, Hc, gdt, ro, v_init, *, j_max: int,
+                    t_max: int, delta_steps: int, n_sweeps: int):
+    """Run one backend on stacked grids, sharding the scenario axis over an
+    active ``repro.sharding`` mesh when its rules allow (transparent
+    single-device fallback: the unwrapped call is byte-identical to the
+    pre-refactor one)."""
+    mod = solver_backends.get(name)
+    statics = dict(j_max=j_max, t_max=t_max, delta_steps=delta_steps,
+                   n_sweeps=n_sweeps)
+    if name == "reference":
+        # the Python-loop batch adapter: per-scenario dispatches, no shard
+        return mod.solve_tables_batch(Fc, Hc, gdt, ro, v_init, **statics)
     if v_init is None:
-        # cold start: optimistic j*dt (built inside the jit, exactly as the
-        # reference does — the None-vs-array pytree structure gives the warm
-        # path its own trace, so this cold graph stays byte-identical to the
-        # pre-warm-start kernel and the solve/solve_batch bit contract holds)
-        v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
-        V_init = jnp.broadcast_to(v0, (S, j_max + 1, T)).astype(jnp.float32)
+        kern = lambda fc, hc: mod.solve_tables_batch(fc, hc, gdt, ro, None,
+                                                     **statics)
+        args = (Fc, Hc)
     else:
-        # warm start: seed the restart-cost fixed point with a previously
-        # converged V (the closed-loop runtime hands in the last-good tables
-        # after a drift refit — fewer sweeps reach the same fixed point)
-        V_init = v_init.astype(jnp.float32)
-    (V, K), _ = jax.lax.scan(one_sweep,
-                             (V_init, jnp.zeros((S, j_max + 1, T), jnp.int32)),
-                             None, length=n_sweeps)
-    return V, K
+        kern = lambda fc, hc, vi: mod.solve_tables_batch(fc, hc, gdt, ro, vi,
+                                                         **statics)
+        args = (Fc, Hc, v_init)
+    fn, _ = solver_backends.shard_scenarios(kern, Fc.shape[0], len(args), 2)
+    return fn(*args)
+
+
+def _dispatch_refined(dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
+                      refine_check: str, *, j_max: int, t_max: int,
+                      delta_steps: int, n_sweeps: int):
+    """The coarse-to-fine pipeline (see ``solver_backends.refine``): coarse
+    hint solve at ``factor x grid_dt``, a host round-trip turning its argmin
+    table into static per-segment candidate caps, pruned pre-sweeps, one
+    full-resolution sweep — falling back to the plain XLA solve whenever the
+    column-0 check (or the optional full check) fails."""
+    statics = dict(j_max=j_max, t_max=t_max, delta_steps=delta_steps,
+                   n_sweeps=n_sweeps)
+    factor, radius = rplan["factor"], rplan["radius"]
+    j_max_c, delta_c = rplan["j_max_c"], rplan["delta_steps_c"]
+    Fcs_c, Hcs_c, t_max_c = [], [], None
+    for d in dists:
+        f, h, t_max_c = _cdf_grids(d, grid_dt * factor)
+        Fcs_c.append(f)
+        Hcs_c.append(h)
+    Fc_c, Hc_c = jnp.stack(Fcs_c), jnp.stack(Hcs_c)
+    S = Fc.shape[0]
+
+    coarse = lambda fc, hc: (_refine.coarse_tables(
+        fc, hc, jnp.float32(grid_dt * factor), ro, j_max_c=j_max_c,
+        t_max_c=t_max_c, delta_steps_c=delta_c, n_sweeps=n_sweeps),)
+    fn_c, _ = solver_backends.shard_scenarios(coarse, S, 2, 1)
+    (Kc,) = fn_c(Fc_c, Hc_c)
+
+    # host round-trip: the coarse argmin becomes STATIC candidate caps (the
+    # bit-safe prefix-slice form of "refine near the argmin"); retraces are
+    # cached per cap tuple, which a sweep over one workload reuses
+    cone_segs = _refine.cone_segments(j_max, t_max, delta_steps)
+    caps = _refine.candidate_caps(Kc, cone_segs, factor=factor,
+                                  radius=radius, j_max_c=j_max_c,
+                                  t_max_c=t_max_c)
+
+    rstatics = dict(statics, caps=caps)
+    if v_init is None:
+        kern = lambda fc, hc: _refine.refined_solve(fc, hc, gdt, ro, None,
+                                                    **rstatics)
+        args = (Fc, Hc)
+    else:
+        kern = lambda fc, hc, c0: _refine.refined_solve(
+            fc, hc, gdt, ro, c0, **rstatics)
+        args = (Fc, Hc, v_init[:, :, 0])
+    fn, _ = solver_backends.shard_scenarios(kern, S, len(args), 3)
+    V, K, ok = fn(*args)
+
+    info = dict(rplan, applied=True, t_max_c=t_max_c, caps=list(caps),
+                verified_col0=bool(np.asarray(ok).all()), fallback=False)
+    if not info["verified_col0"]:
+        # a cap cut off an argmin on the restart-cost chain: the refined
+        # tables are not trustworthy — serve the plain solve instead
+        V, K = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, **statics)
+        info["fallback"] = True
+        return V, K, info
+    if refine_check == "full":
+        # debug/CI harness: compare the whole refined table against the
+        # plain solve (costs more than the solve it checks)
+        Vf, Kf = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, **statics)
+        match = bool(np.array_equal(np.asarray(V), np.asarray(Vf))
+                     and np.array_equal(np.asarray(K), np.asarray(Kf)))
+        info["full_check_match"] = match
+        if not match:
+            V, K = Vf, Kf
+            info["fallback"] = True
+    return V, K, info
 
 
 def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
                 delta_steps: int = 1, n_sweeps: int = 3,
-                restart_overhead: float = 0.0,
-                v_init=None) -> BatchDPTables:
+                restart_overhead: float = 0.0, v_init=None,
+                backend: str = "auto", refine: bool = False,
+                refine_factor: int = 4, refine_radius: Optional[int] = None,
+                refine_check: str = "col0") -> BatchDPTables:
     """Solve the checkpointing DP for a whole scenario batch in ONE compiled
-    call (see :func:`_solve_tables_batch`).
+    call (see ``solver_backends`` and ``docs/solver.md``).
 
     ``dists`` is a sequence of distributions sharing one deadline ``L``.
-    Each scenario's ``Fc``/``Hc`` grid is built exactly as :func:`solve`
-    builds it (same eager ops), then the stacked grids go through the
-    batched kernel — so every returned slice matches the per-scenario
-    :func:`solve` result table-for-table, bit-exactly.
+    Each scenario's ``Fc``/``Hc`` grid is built by the shared
+    :func:`_cdf_grids` helper (the same eager ops :func:`solve` uses), then
+    the stacked grids go through the selected backend — for ``"xla"`` (the
+    ``"auto"`` default off-TPU) every returned slice matches the
+    per-scenario :func:`solve` result table-for-table, bit-exactly.
+
+    ``backend`` selects the kernel (``"auto"``/``"reference"``/``"xla"``/
+    ``"pallas"``; ``"auto"`` honors the ``REPRO_SOLVER_BACKEND`` env var).
+    ``refine=True`` runs the coarse-to-fine pipeline on the XLA machinery:
+    a coarse solve at ``refine_factor x grid_dt`` supplies argmin hints that
+    cap the pre-sweeps' candidate axis (to ``factor*K_c + refine_radius``
+    per segment) inside the column-0 dependency cone, and the final sweep
+    runs at full resolution;
+    a bit-level column-0 verification guards every pre-sweep, falling back
+    to the plain solve on failure (``refine_check="full"`` additionally
+    compares the whole table in-process; ``"off"`` is not available — the
+    column check is always on).
 
     ``v_init`` optionally warm-starts the restart-cost fixed point from a
     previous solve's ``V`` array of matching shape ``(S, j_max+1, t_max+1)``
@@ -391,24 +326,38 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
         if not np.all(np.isfinite(v_init)):
             raise ValueError("solve_batch(v_init=...): non-finite warm start")
         v_init = jnp.asarray(v_init, jnp.float32)
-    tk = jnp.arange(t_max + 1) * grid_dt
-    Fcs, Hcs = [], []
-    for d in dists:
-        F_raw = jnp.clip(d.cdf(tk), 0.0, 1.0)
-        atom = jnp.maximum(1.0 - F_raw[-1], 0.0)         # provider kill at L
-        Fcs.append(F_raw.at[-1].set(1.0).astype(jnp.float32))
-        H_raw = d.partial_expectation(jnp.zeros_like(tk), tk)
-        Hcs.append(H_raw.at[-1].add(atom * L).astype(jnp.float32))
-    # f32-pinned scalars: see solve() — keeps V/K identical at any dtype
-    V, K = _solve_tables_batch(jnp.stack(Fcs), jnp.stack(Hcs),
-                               jnp.float32(grid_dt),
-                               jnp.float32(restart_overhead), v_init,
-                               j_max=int(job_steps), t_max=t_max,
-                               delta_steps=int(delta_steps),
-                               n_sweeps=n_sweeps)
+    grids_fh = [_cdf_grids(d, grid_dt) for d in dists]
+    Fc = jnp.stack([g[0] for g in grids_fh])
+    Hc = jnp.stack([g[1] for g in grids_fh])
+    # f32-pinned scalars: see _cdf_grids — keeps V/K identical at any dtype
+    gdt, ro = jnp.float32(grid_dt), jnp.float32(restart_overhead)
+    statics = dict(j_max=int(job_steps), t_max=t_max,
+                   delta_steps=int(delta_steps), n_sweeps=n_sweeps)
+    refine_info = None
+    if refine:
+        if backend not in ("auto", "xla"):
+            raise ValueError(
+                f"solve_batch(refine=True) runs on the XLA machinery; "
+                f"backend={backend!r} is contradictory")
+        name = "xla"
+        rplan = _refine.plan(int(job_steps), t_max, int(delta_steps),
+                             n_sweeps, refine_factor, refine_radius)
+        if rplan is None:
+            # grid too small to refine (or single sweep): plain solve
+            V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, **statics)
+            refine_info = {"applied": False, "reason": "degenerate"}
+        else:
+            V, K, refine_info = _dispatch_refined(
+                dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
+                refine_check, **statics)
+    else:
+        name = solver_backends.resolve(backend)
+        V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, **statics)
     return BatchDPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                          delta_steps=int(delta_steps),
-                         restart_overhead=restart_overhead, horizon_idx=t_max)
+                         restart_overhead=restart_overhead, horizon_idx=t_max,
+                         backend=name + ("+refine" if refine else ""),
+                         refine_info=refine_info)
 
 
 def extract_schedule(tables: DPTables, job_steps: int,

@@ -1,0 +1,47 @@
+"""Shared DP grid construction: the discretized lifetime CDF and its
+partial-expectation companion.
+
+Every solver backend consumes the same pair of per-scenario grids:
+
+  ``Fc[t]``  the lifetime CDF on the age grid, with the provider-kill atom
+             at the deadline ``L`` folded into the last cell (``Fc[-1] = 1``);
+  ``Hc[t]``  the partial expectation ``H(t) = int_0^t x dF~(x)`` including
+             the same atom (``Hc[-1] += atom * L``) — the numerator of the
+             conditional expected-loss term E[x - t | fail in (t, t+w]].
+
+This module is the single source of those grids (PR 7 deduplicated the
+copies that ``solve`` and ``solve_batch`` used to carry): the eager op
+sequence below is the bit-exactness anchor — every backend receives float32
+grids built by exactly these ops at any session dtype, which is what lets
+the batched/XLA/Pallas kernels be compared table-for-table against the
+serial reference.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Shared guard against zero survival/failure mass in the conditional forms;
+# all backends must use this same constant so their per-element arithmetic
+# stays comparable.
+_EPS = 1e-9
+
+
+def cdf_grids(dist, grid_dt: float):
+    """Build the (Fc, Hc) solver grids for one distribution.
+
+    Returns ``(Fc, Hc, t_max)`` where the grids have ``t_max + 1`` cells
+    (``t_max = round(L / grid_dt)``) and are pinned to the solver's native
+    float32: a python-float scalar would trace as weak f64 under x64 and
+    shift parts of the DP arithmetic to f64, where the reference and batched
+    kernels round differently — pinning keeps every backend bit-comparable
+    at any session dtype.
+    """
+    L = float(dist.L)
+    t_max = int(round(L / grid_dt))
+    tk = jnp.arange(t_max + 1) * grid_dt
+    F_raw = jnp.clip(dist.cdf(tk), 0.0, 1.0)
+    atom = jnp.maximum(1.0 - F_raw[-1], 0.0)             # provider kill at L
+    Fc = F_raw.at[-1].set(1.0).astype(jnp.float32)
+    H_raw = dist.partial_expectation(jnp.zeros_like(tk), tk)
+    Hc = H_raw.at[-1].add(atom * L).astype(jnp.float32)
+    return Fc, Hc, t_max

@@ -1,0 +1,259 @@
+"""Coarse-to-fine DP refinement: solve at ``factor x grid_dt``, prune the
+pre-sweeps to the coarse argmin's neighborhood and the restart-cost
+dependency cone, verify, then run one full-resolution production sweep.
+
+Why this is sound
+-----------------
+The sweep structure couples sweeps ONLY through the restart-cost column
+``V[:, :, 0]`` (``R_j = overhead + V_prev[j, 0]``; the warm-start test in
+``tests/test_runtime.py`` pins this: one warm sweep from a 3-sweep ``V``
+equals the 4-sweep cold solve bit-for-bit).  So only the FINAL sweep has to
+run at full resolution over the full candidate axis to produce the output
+``V``/``K`` with the exact first-match argmin; the ``n_sweeps - 1`` sweeps
+before it exist solely to reproduce the restart-cost trajectory
+``R^(1) .. R^(n-1)``, and for those we can prune aggressively:
+
+  * **the column-0 dependency cone** — ``R`` needs ``V[j, 0]`` only, and
+    ``V[j, 0]`` transitively reads row ``j'`` at ages ``t <= M(j') =
+    (1 + delta) * (j_max - j')`` (induction: from ``(j, t)`` with
+    ``t <= M(j)`` the body reads ``(j - i, t + i + delta)`` and
+    ``M(j) + i + delta <= M(j - i)``).  Pre-sweeps compute each j-segment
+    only out to its cone extent; ages beyond a row's own cone may absorb
+    unwritten zeros from deeper rows, but by the same induction nothing
+    inside the cone ever reads them, and the final full sweep reads only
+    ``R``.
+  * **candidate-prefix caps near the coarse argmin** — a coarse solve at
+    ``factor x grid_dt`` gives argmin hints ``K_c``; per j-segment the fine
+    candidate axis is capped at ``factor * max(K_c over the segment's cone)
+    + radius`` (the run-to-completion candidate ``i == j`` is always kept).
+    The cap is a STATIC column-prefix slice of the hoisted grids — the same
+    mechanism ``xla.seg_views`` already uses — because a min over a
+    candidate prefix equals the full min whenever the prefix contains a
+    minimizer.  Gather-based per-(j, t) windows are deliberately NOT used:
+    gathered operands change XLA's fusion context and shift results by
+    1 ulp, breaking bit-exactness even when the window covers the argmin.
+
+Both prunings reuse ``xla.body_factory``'s exact per-candidate expression on
+sliced views of ``xla.candidate_grids`` (minus the argmin payload — pre-sweep
+``K`` is never observed), so every computed element rounds identically to
+the plain solve's.
+
+Verification: after each pre-sweep, column 0 is recomputed at FULL candidate
+width (same expression, age extent 1) from the pre-sweep table and compared
+bit-for-bit.  A mismatch means a cap cut off an argmin where the
+restart-cost chain reads; the per-scenario ``ok`` flag goes False and the
+dispatcher falls back to the plain full-resolution solve.  The check is
+necessary-not-sufficient (a capped miss in the cone interior that happens
+not to move column 0 escapes it), so the equivalence tests additionally pin
+the whole refined table against the plain solve on every workload they
+cover; ``refine_check="full"`` in ``solve_batch`` runs that comparison
+in-process.
+
+The final sweep itself is ``xla.sweep_from_R`` — the production kernel's own
+full-resolution sweep — so a verified refined solve IS the plain solve's
+last sweep, fed an identically-valued ``R``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import xla
+
+# pre-sweeps split the j axis finer than the full sweep's thirds so the
+# per-segment age extent hugs the dependency cone
+_N_CONE_SEGS = 6
+
+
+def plan(j_max: int, t_max: int, delta_steps: int, n_sweeps: int,
+         factor: int, radius):
+    """Static refinement plan, or None when refinement cannot help (grid too
+    small for a meaningful coarse level, or nothing to prune: with
+    ``n_sweeps == 1`` there are no pre-sweeps)."""
+    factor = int(factor)
+    if radius is None:
+        # the coarse argmin locates the fine argmin to ~factor steps; pad x3
+        # so hint error from the coarser delta/deadline rounding stays inside
+        radius = 3 * factor
+    radius = int(radius)
+    if (factor < 2 or n_sweeps < 2 or j_max < 4 * factor
+            or t_max < 4 * factor):
+        return None
+    return {
+        "factor": factor,
+        "radius": radius,
+        "j_max_c": max(1, (j_max + factor // 2) // factor),
+        "delta_steps_c": max(1, (delta_steps + factor // 2) // factor),
+    }
+
+
+def cone_segments(j_max: int, t_max: int, delta_steps: int):
+    """(lo, hi, age_extent) segments covering rows 1..j_max, each clipped to
+    the column-0 dependency cone ``ages <= (1+delta)*(j_max - lo)``."""
+    n_seg = _N_CONE_SEGS if j_max >= 8 * _N_CONE_SEGS else 1
+    bounds = [1 + (k * j_max) // n_seg for k in range(n_seg)] + [j_max + 1]
+    segs = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if lo >= hi:
+            continue
+        A = min(t_max + 1, (1 + delta_steps) * (j_max - lo) + 1)
+        segs.append((lo, hi, max(A, 1)))
+    return segs
+
+
+def candidate_caps(Kc, segs, *, factor: int, radius: int, j_max_c: int,
+                   t_max_c: int):
+    """Per-segment static candidate-axis caps from the coarse argmin table.
+
+    Host-side (numpy): the caps become static jit arguments, turning "near
+    the argmin" into bit-safe column-prefix slicing.  Per segment the cap
+    covers ``factor * K_c + radius`` over every (scenario, row, cone age)
+    the segment touches — conservative, so spread-out argmins (e.g. a
+    decreasing-hazard Weibull going run-to-completion at old ages) simply
+    degrade the cap toward the full axis instead of going wrong.
+    """
+    Kc = np.asarray(Kc)
+    caps = []
+    for lo, hi, A in segs:
+        jlo_c = min(max((lo + factor // 2) // factor, 0), j_max_c)
+        jhi_c = min(max((hi - 1 + factor // 2) // factor, 0), j_max_c)
+        thi_c = min(max((A - 1 + factor // 2) // factor, 0), t_max_c)
+        kmax = int(Kc[:, jlo_c:jhi_c + 1, :thi_c + 1].max())
+        cap = min(hi - 1, factor * kmax + radius)
+        caps.append(max(cap, 1))
+    return tuple(caps)
+
+
+def cone_views(gp, delta_steps, I_len, A):
+    """Slice the hoisted grids to a segment's (cone ages x candidate cap)
+    block.  Age and candidate-prefix slices are static, so the body compiles
+    to the same per-element codegen as the full-extent sweep (bit-safety);
+    the final-segment (``i == j``) grids stay full candidate width because
+    row j always reads their column ``j - 1``."""
+    pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full = gp
+    return (i_full[:I_len], i_full[:I_len] + delta_steps,
+            pf_nf_f[:, :A, :I_len], el_nf_f[:, :A, :I_len],
+            pf_fd_f[:, :A, :], el_fd_f[:, :A, :],
+            end_nf_f[0][:A, :I_len], end_fd_f[0][:A, :])
+
+
+def _row_values(sd, V, R, dead_a, dt, j):
+    """Value row j over a cone segment's sliced views — ``xla.body_factory``'s
+    exact expression minus the argmin payload, with the ``i == j`` candidate
+    folded in by an (exact) two-way min instead of the column patch."""
+    i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
+    valid = i_ax < j                      # i == j is the fd candidate below
+
+    def one(V1, pf1, el1, pffd1, elfd1, Rj1):
+        Vg = V1[(j - i_ax)[None, :], end_nf]
+        v_succ = w_nf[None, :] * dt + Vg
+        v_fail = el1 + Rj1
+        cost = (1.0 - pf1) * v_succ + pf1 * v_fail
+        costm = jnp.where(valid[None, :], cost, jnp.inf)
+        m_nf = jnp.min(costm, axis=1)
+        # final-segment candidate i == j: w = i, V[j-i] == V[0]
+        colV = V1[0, end_fd[:, j - 1]]
+        vs_f = jnp.asarray(j, cost.dtype) * dt + colV
+        cost_f = (1.0 - pffd1[:, j - 1]) * vs_f \
+            + pffd1[:, j - 1] * (elfd1[:, j - 1] + Rj1)
+        return jnp.minimum(m_nf, cost_f)
+
+    vj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd, R[:, j][:, None])
+    return jnp.where(dead_a, R[:, j][:, None], vj)
+
+
+def _cone_presweep(gp, cone_segs, caps, col0, dead, dt, restart_overhead, *,
+                   j_max, t_max, delta_steps):
+    """One pruned value-only sweep.  Returns (new column 0, ok flags)."""
+    S = col0.shape[0]
+    R = restart_overhead + col0                           # (S, j_max+1)
+    V = jnp.zeros((S, j_max + 1, t_max + 1), jnp.float32)
+    for (lo, hi, A), cap in zip(cone_segs, caps):
+        sd = cone_views(gp, delta_steps, cap, A)
+        dead_a = dead[:, :A]
+
+        def body(j, V, sd=sd, dead_a=dead_a):
+            vj = _row_values(sd, V, R, dead_a, dt, j)
+            return jax.vmap(lambda V1, r: jax.lax.dynamic_update_slice(
+                V1, r[None, :], (j, 0)))(V, vj.astype(V.dtype))
+
+        V = jax.lax.fori_loop(lo, hi, body, V)
+    ok = _col0_check(gp, cone_segs, V, R, dead, dt, delta_steps=delta_steps)
+    return V[:, :, 0], ok
+
+
+def _col0_check(gp, cone_segs, V, R, dead, dt, *, delta_steps):
+    """Recompute column 0 over the FULL candidate axis (age extent 1, same
+    expression) from the pre-sweep table and compare bit-for-bit — the cheap
+    necessary condition that no cap cut off an argmin where the restart-cost
+    chain reads."""
+    dead_0 = dead[:, :1]
+
+    def check_seg(lo, hi):
+        sd = cone_views(gp, delta_steps, hi - 1, 1)
+
+        def body(j, ok):
+            vj = _row_values(sd, V, R, dead_0, dt, j)
+            return ok & (vj[:, 0] == V[:, j, 0])
+
+        return lo, hi, body
+
+    ok = jnp.ones((V.shape[0],), bool)
+    for lo, hi, _A in cone_segs:
+        lo, hi, body = check_seg(lo, hi)
+        ok = jax.lax.fori_loop(lo, hi, body, ok)
+    return ok
+
+
+def _refined_impl(Fc, Hc, grid_dt, restart_overhead, v_init_col0=None, *,
+                  j_max: int, t_max: int, delta_steps: int, n_sweeps: int,
+                  caps: tuple):
+    """The fine-level pipeline: pruned pre-sweeps, then ONE full-resolution
+    sweep through the production kernel's own machinery.  Returns
+    ``(V, K, ok)`` with ``ok`` a per-scenario verification mask."""
+    dt = grid_dt
+    S = Fc.shape[0]
+    dead = (1.0 - Fc) < 1e-6
+    segs = xla.seg_plan(j_max)
+    gp = xla.candidate_grids(Fc, Hc, dt, j_max=j_max, t_max=t_max,
+                             delta_steps=delta_steps)
+    seg_data = [xla.seg_views(gp, delta_steps, I) for I, _, _ in segs]
+    cone_segs = cone_segments(j_max, t_max, delta_steps)
+
+    if v_init_col0 is None:
+        # cold start: the optimistic j*dt seed's column 0 (matches the plain
+        # kernels' cold V_init exactly)
+        col0 = jnp.broadcast_to((jnp.arange(j_max + 1) * dt)[None, :],
+                                (S, j_max + 1)).astype(jnp.float32)
+    else:
+        col0 = v_init_col0.astype(jnp.float32)
+
+    ok = jnp.ones((S,), bool)
+    for _ in range(n_sweeps - 1):
+        col0, ok_k = _cone_presweep(
+            gp, cone_segs, caps, col0, dead, dt, restart_overhead,
+            j_max=j_max, t_max=t_max, delta_steps=delta_steps)
+        ok = ok & ok_k
+
+    R = restart_overhead + col0
+    V, K = xla.sweep_from_R(gp, seg_data, segs, R, dead, dt,
+                            j_max=j_max, t_max=t_max)
+    return V, K, ok
+
+
+refined_solve = jax.jit(
+    _refined_impl,
+    static_argnames=("j_max", "t_max", "delta_steps", "n_sweeps", "caps"))
+
+
+def coarse_tables(Fc_c, Hc_c, grid_dt_c, restart_overhead, *, j_max_c,
+                  t_max_c, delta_steps_c, n_sweeps):
+    """The coarse hint solve: a plain XLA solve on the ``factor x`` grid.
+    Only ``K`` is used (argmin hints); cost is ~``factor**-3`` of the fine
+    solve."""
+    _, Kc = xla.solve_tables_batch(
+        Fc_c, Hc_c, grid_dt_c, restart_overhead, None, j_max=j_max_c,
+        t_max=t_max_c, delta_steps=delta_steps_c, n_sweeps=n_sweeps)
+    return Kc

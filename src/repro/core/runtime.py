@@ -113,6 +113,11 @@ class RuntimeConfig:
     warm_sweeps: int = 2                # sweeps when warm-started from last V
     warm_start: bool = True
     max_restarts: int = 64
+    # solver backend (see docs/solver.md): passed straight through to
+    # checkpointing.solve_batch; "auto" keeps the platform default and the
+    # REPRO_SOLVER_BACKEND env override
+    solver_backend: str = "auto"
+    solver_refine: bool = False         # coarse-to-fine pre-sweep pruning
     # tracker
     window: int = 256
     refit_every: int = 64
@@ -239,7 +244,8 @@ class FleetRuntime:
             delta_steps=cfg.delta_steps,
             n_sweeps=cfg.warm_sweeps if warm else cfg.n_sweeps,
             restart_overhead=cfg.restart_overhead,
-            v_init=self.live_tables.V if warm else None)
+            v_init=self.live_tables.V if warm else None,
+            backend=cfg.solver_backend, refine=cfg.solver_refine)
         dt = time.perf_counter() - t0
         if dt > cfg.solve_budget_s:
             raise SolveTimeout(f"solve took {dt:.2f}s "

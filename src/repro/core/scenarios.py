@@ -250,7 +250,9 @@ def sweep_checkpointing(scenarios: Iterable, *,
                         delta_steps: int = 1, max_restarts: int = 64,
                         restart_overhead: float = 0.0,
                         n_sweeps: int = 3, mode: str = "batched",
-                        tables: Optional["ckpt.BatchDPTables"] = None) -> list:
+                        tables: Optional["ckpt.BatchDPTables"] = None,
+                        solver_backend: str = "auto",
+                        solver_refine: bool = False) -> list:
     """Expand (scenario x policy x seed) over the vectorized executor.
 
     ``mode="batched"`` (default) folds the WHOLE grid into the engine's
@@ -281,6 +283,11 @@ def sweep_checkpointing(scenarios: Iterable, *,
     solve entirely — the whole-grid *re-evaluation* path (fresh seeds,
     trial counts or policies against fixed market models) then costs only
     the pool draw and the single executor dispatch.
+
+    ``solver_backend``/``solver_refine`` pass straight through to
+    ``checkpointing.solve_batch`` (batched/grouped modes; the serial
+    reference path always runs the reference kernel) — see
+    ``docs/solver.md``.
     """
     if mode not in ("batched", "grouped", "serial"):
         raise ValueError(f"mode must be 'batched', 'grouped' or 'serial', "
@@ -336,7 +343,8 @@ def sweep_checkpointing(scenarios: Iterable, *,
     dist_list = [sc.dist() for sc in scs]
     batch = tables if tables is not None else ckpt.solve_batch(
         dist_list, job_steps, grid_dt=grid_dt, delta_steps=delta_steps,
-        n_sweeps=n_sweeps, restart_overhead=restart_overhead)
+        n_sweeps=n_sweeps, restart_overhead=restart_overhead,
+        backend=solver_backend, refine=solver_refine)
     ptables = {p: _policy_tables_batch(p, batch, job_steps, grid_dt,
                                        delta_steps, dist_list)
                for p in policies}

@@ -18,6 +18,11 @@ Three implementations per op, in three modules:
                         recurrence with a persistent VMEM hidden state
   decode_attention.py   Pallas TPU kernel: flash-decode over a long KV cache
                         (one HBM pass - the decode roofline optimum)
+  dp_recurrence.py      Pallas TPU kernel: the checkpointing-DP inner
+                        recurrence (Eqs. 11-15), grid over the scenario axis,
+                        rows as (1, TB) lanes with a VMEM value scratch -
+                        reached via solve_batch(backend="pallas"); see
+                        docs/solver.md
 
 Pallas kernels target TPU; on this CPU container they are validated with
 ``interpret=True`` against ref.py over shape/dtype sweeps

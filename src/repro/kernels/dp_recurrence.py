@@ -1,0 +1,149 @@
+"""Checkpointing-DP inner recurrence (Eqs. 11-15) as a Pallas TPU kernel.
+
+Grid = ``(S,)``: one program per scenario, with the whole per-scenario DP —
+``n_sweeps`` restart-cost fixed-point sweeps x ``j_max`` rows — run inside
+the program so the value table never leaves VMEM.  Layout per program:
+
+  * the VM-age axis lives on the lanes: every row is a ``(1, T_pad)`` f32
+    vector, so one candidate evaluation is a handful of W-wide VPU
+    multiply-adds;
+  * the j-loop's min-reduce over candidate intervals is a blocked
+    sequential scan: candidates ``i = 1..j`` stream one at a time, each
+    updating a running ``(1, T_pad)`` min (strict ``<`` on an ascending
+    scan keeps the reference's first-match argmin for ``K``);
+  * the value table is a persistent ``(j_max+1, T_pad)`` VMEM scratch whose
+    tail padding holds each row's horizon value, so the reference's
+    ``clip(t + w, 0, t_max)`` age gather becomes a plain shifted row load.
+
+Unlike the XLA backend — which hoists ``(T, I)`` probability/loss grids per
+scenario — this kernel recomputes ``p_fail``/``e_lost`` on the fly from the
+``(1, T_pad)`` CDF rows as shifted-slice arithmetic: nothing larger than the
+value table is ever materialized, which is what lets market-scale scenario
+counts fit one core's VMEM.  The trade is bit-exactness: recomputation under
+a different fusion schedule rounds differently at ULP scale, so this backend
+is tolerance-tested against the reference, not bit-pinned (see
+``docs/solver.md``).
+
+Oracle: ``solver_backends.reference``.  On CPU containers the kernel runs
+with ``interpret=True`` (tests/test_solver_backends.py, marker ``pallas``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_EPS = 1e-9
+
+
+def _dp_kernel(fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr, *,
+               dt: float, restart_overhead: float, j_max: int, t_max: int,
+               delta_steps: int, n_sweeps: int, TPL: int, TB: int):
+    T = t_max + 1
+    dtf = jnp.float32(dt)
+    rof = jnp.float32(restart_overhead)
+    fc = fc_ref[...]                                  # (1, TB)
+    hc = hc_ref[...]
+    Ft = fc[:, :TPL]
+    Ht = hc[:, :TPL]
+    St = jnp.maximum(1.0 - Ft, _EPS)
+    dead = (1.0 - Ft) < 1e-6                          # padded lanes: Fc=1
+    t_dt = jax.lax.broadcasted_iota(jnp.int32, (1, TPL), 1) * dtf
+
+    # row 0 (job done): V = 0 at every age, including the horizon padding
+    v_scr[0, :] = jnp.zeros((TB,), jnp.float32)
+    v_out[0, 0, :] = jnp.zeros((T,), jnp.float32)
+    k_out[0, 0, :] = jnp.zeros((T,), jnp.int32)
+    # restart-cost column seed (cold j*dt or the warm-start V's column 0)
+    c0_scr[...] = c0_ref[...]
+
+    def sweep(_s, carry):
+        r = rof + c0_scr[...]                         # (1, j_max+1) snapshot
+
+        def row(j, carry):
+            Rj = r[0, j]
+            m0 = jnp.full((1, TPL), jnp.inf, jnp.float32)
+            k0 = jnp.zeros((1, TPL), jnp.int32)
+
+            def cand(i, mk):
+                m, k = mk
+                w = jnp.where(i == j, i, i + delta_steps)
+                Fe = jax.lax.dynamic_slice(fc, (0, w), (1, TPL))
+                He = jax.lax.dynamic_slice(hc, (0, w), (1, TPL))
+                p_fail = jnp.clip((Fe - Ft) / St, 0.0, 1.0)
+                dF = jnp.maximum(Fe - Ft, _EPS)
+                e_lost = (He - Ht) / dF - t_dt
+                e_lost = jnp.clip(e_lost, 0.0, w * dtf)
+                vrow = pl.load(v_scr, (pl.ds(j - i, 1), pl.ds(w, TPL)))
+                v_succ = w * dtf + vrow
+                cost = (1.0 - p_fail) * v_succ + p_fail * (e_lost + Rj)
+                upd = cost < m
+                return jnp.where(upd, cost, m), jnp.where(upd, i, k)
+
+            m, k = jax.lax.fori_loop(1, j + 1, cand, (m0, k0))
+            vj = jnp.where(dead, Rj, m)
+            kj = jnp.where(dead, jnp.minimum(j, j_max), k)
+            # persist the row: computed lanes, then horizon padding (age >=
+            # t_max means a dead VM, whose value is exactly Rj)
+            pl.store(v_scr, (pl.ds(j, 1), pl.ds(0, TPL)), vj)
+            pl.store(v_scr, (pl.ds(j, 1), pl.ds(TPL, TB - TPL)),
+                     jnp.broadcast_to(Rj, (1, TB - TPL)))
+            pl.store(c0_scr, (pl.ds(0, 1), pl.ds(j, 1)), vj[:, 0:1])
+            pl.store(v_out, (pl.ds(0, 1), pl.ds(j, 1), pl.ds(0, T)),
+                     vj[:, :T].reshape(1, 1, T))
+            pl.store(k_out, (pl.ds(0, 1), pl.ds(j, 1), pl.ds(0, T)),
+                     kj[:, :T].reshape(1, 1, T))
+            return carry
+
+        return jax.lax.fori_loop(1, j_max + 1, row, carry)
+
+    jax.lax.fori_loop(0, n_sweeps, sweep, 0)
+
+
+def dp_recurrence(Fc, Hc, col0, *, grid_dt: float, restart_overhead: float,
+                  j_max: int, t_max: int, delta_steps: int, n_sweeps: int,
+                  interpret: bool = False):
+    """Solve the batched checkpointing DP.
+
+    Fc, Hc: (S, t_max+1) f32 CDF / partial-expectation grids (see
+    ``solver_backends.grids``); col0: (S, j_max+1) f32 seed for the
+    restart-cost column (cold ``j*dt`` or a warm start's ``V[:, :, 0]``).
+    Returns (V, K) of shapes (S, j_max+1, t_max+1).
+    """
+    S, T = Fc.shape
+    assert T == t_max + 1, (T, t_max)
+    pad = j_max + delta_steps + 8        # max age shift is j_max + delta
+    TPL = T + pad                        # compute width (tail lanes: dead)
+    TB = TPL + pad                       # buffer width for shifted loads
+    fc = jnp.pad(Fc, ((0, 0), (0, TB - T)), mode="edge")
+    hc = jnp.pad(Hc, ((0, 0), (0, TB - T)), mode="edge")
+    kernel = functools.partial(
+        _dp_kernel, dt=float(grid_dt), restart_overhead=float(restart_overhead),
+        j_max=j_max, t_max=t_max, delta_steps=delta_steps, n_sweeps=n_sweeps,
+        TPL=TPL, TB=TB)
+    V, K = pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, TB), lambda s: (s, 0)),
+            pl.BlockSpec((1, TB), lambda s: (s, 0)),
+            pl.BlockSpec((1, j_max + 1), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, j_max + 1, T), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, j_max + 1, T), lambda s: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, j_max + 1, T), jnp.float32),
+            jax.ShapeDtypeStruct((S, j_max + 1, T), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((j_max + 1, TB), jnp.float32),
+            pltpu.VMEM((1, j_max + 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fc, hc, col0)
+    return V, K

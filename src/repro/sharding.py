@@ -61,6 +61,11 @@ RULES_BASELINE = {
     # -- kv / recurrent caches --
     "cache_batch": ("pod", "data"), "cache_seq": "model", "cache_kv": None,
     "cache_dim": None,
+    # -- solver --
+    # the DP solver's (S,) scenario batch axis (repro.core.policies): prefers
+    # a dedicated "scenario" mesh axis when the mesh defines one, else splits
+    # over the data-parallel axes like any other batch dimension
+    "scenario": ("scenario", "pod", "data"),
 }
 
 # Beyond-paper optimized layout: ZeRO-3 weight sharding over `data`,
@@ -86,6 +91,7 @@ RULES_DP_ZERO1 = {
     **{k: None for k in RULES_BASELINE},
     "act_batch": ("pod", "data", "model"),
     "cache_batch": ("pod", "data", "model"),
+    "scenario": ("scenario", "pod", "data", "model"),
     "opt::w_embed": "data", "opt::w_vocab": "model", "opt::w_mlp": "model",
     "opt::w_qdim": "model", "opt::w_kv_dim": "model", "opt::w_lru": "model",
     "opt::w_inner": "model", "opt::w_experts": "model",

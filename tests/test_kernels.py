@@ -32,6 +32,7 @@ FLASH_CASES = [
 ]
 
 
+@pytest.mark.pallas
 @pytest.mark.parametrize("case", FLASH_CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pallas_flash_matches_ref(case, dtype):
@@ -87,6 +88,7 @@ DECODE_CASES = [
 ]
 
 
+@pytest.mark.pallas
 @pytest.mark.parametrize("case", DECODE_CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pallas_decode_matches_ref(case, dtype):
@@ -106,6 +108,7 @@ def test_pallas_decode_matches_ref(case, dtype):
 LINREC_CASES = [(2, 64, 32), (1, 128, 16), (3, 96, 8), (2, 256, 64)]
 
 
+@pytest.mark.pallas
 @pytest.mark.parametrize("case", LINREC_CASES)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pallas_linrec_matches_ref(case, dtype):

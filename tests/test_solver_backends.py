@@ -1,0 +1,263 @@
+"""Solver backend equivalence: the bit-exactness contract across the
+pluggable backends (reference vs xla vs coarse-to-fine), Pallas interpret
+tolerance, backend selection/env-override rules, scenario sharding
+transparency, and the FleetRuntime mid-sweep backend swap pinning the
+``v_init`` warm-start semantics."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core import distributions as D
+from repro.core import runtime as rt
+from repro.core.policies import checkpointing as C
+from repro.core.policies import solver_backends as SB
+from repro.core.policies.solver_backends import refine as R
+
+GRID = 1.0 / 12.0
+JOB = 60
+
+
+@pytest.fixture(scope="module")
+def dists():
+    # mixed hazards on one deadline: constrained (the paper's family),
+    # memoryless, and a decreasing-hazard Weibull whose run-to-completion
+    # argmins exercise the refine caps' graceful degradation
+    return [D.constrained_for("n1-highcpu-16"), D.Exponential(mttf=8.0),
+            D.Weibull(lam=0.12, k=0.8)]
+
+
+@pytest.fixture(scope="module")
+def plain(dists):
+    return C.solve_batch(dists, JOB, grid_dt=GRID)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: reference vs xla vs coarse-to-fine (x64 session dtype)
+# ---------------------------------------------------------------------------
+
+def test_reference_vs_xla_bit_identical_x64(dists):
+    """The heart of the contract: per scenario slice the batched XLA kernel
+    reproduces the serial reference bit-for-bit — under an x64 session
+    dtype, because the solver pins its own f32 arithmetic either way.  (The
+    CDF grids themselves are built in session dtype, so the comparison is
+    within-session, not across dtypes.)"""
+    with enable_x64():
+        ref = C.solve_batch(dists, JOB, grid_dt=GRID, backend="reference")
+        xla = C.solve_batch(dists, JOB, grid_dt=GRID, backend="xla")
+    assert ref.backend == "reference" and xla.backend == "xla"
+    assert np.array_equal(ref.V, xla.V)
+    assert np.array_equal(ref.K, xla.K)
+
+
+def test_refined_verified_tables_bit_identical_x64(dists):
+    """Coarse-to-fine with a passing verification is the plain solve: same
+    V, same K, to the bit."""
+    with enable_x64():
+        plain = C.solve_batch(dists, JOB, grid_dt=GRID)
+        ctf = C.solve_batch(dists, JOB, grid_dt=GRID, refine=True,
+                            refine_check="full")
+    info = ctf.refine_info
+    assert info["applied"] and info["verified_col0"]
+    assert not info["fallback"]
+    assert info["full_check_match"]
+    assert ctf.backend == "xla+refine"
+    assert np.array_equal(plain.V, ctf.V)
+    assert np.array_equal(plain.K, ctf.K)
+
+
+def test_refined_warm_start_chain(dists, plain):
+    """Refined pre-sweeps reproduce the warm-start fixed-point chain too:
+    2 warm sweeps (refined) from a 3-sweep cold V == 5-sweep cold solve."""
+    warm = C.solve_batch(dists, JOB, grid_dt=GRID, n_sweeps=2,
+                         v_init=plain.V, refine=True)
+    cold5 = C.solve_batch(dists, JOB, grid_dt=GRID, n_sweeps=5)
+    assert warm.refine_info["applied"]
+    assert not warm.refine_info["fallback"]
+    assert np.array_equal(warm.V, cold5.V)
+    assert np.array_equal(warm.K, cold5.K)
+
+
+def test_refined_fallback_on_sabotaged_caps(dists, plain, monkeypatch):
+    """Force every candidate cap to 1 so the pre-sweeps must miss argmins:
+    the column-0 verification has to catch it and the dispatcher has to
+    serve the plain solve."""
+    monkeypatch.setattr(R, "candidate_caps",
+                        lambda Kc, segs, **kw: (1,) * len(segs))
+    ctf = C.solve_batch(dists, JOB, grid_dt=GRID, refine=True)
+    assert not ctf.refine_info["verified_col0"]
+    assert ctf.refine_info["fallback"]
+    assert np.array_equal(plain.V, ctf.V)
+    assert np.array_equal(plain.K, ctf.K)
+
+
+def test_refine_plan_degenerate_and_bad_backend(dists):
+    small = C.solve_batch(dists, 6, grid_dt=1.0, refine=True)
+    assert small.refine_info == {"applied": False, "reason": "degenerate"}
+    assert R.plan(300, 1440, 1, 1, 4, None) is None     # no pre-sweeps
+    with pytest.raises(ValueError, match="contradictory"):
+        C.solve_batch(dists, JOB, grid_dt=GRID, refine=True,
+                      backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# backend selection
+# ---------------------------------------------------------------------------
+
+def test_resolve_env_override_applies_only_to_auto(monkeypatch):
+    monkeypatch.delenv(SB.ENV_VAR, raising=False)
+    assert SB.resolve("auto") == "xla"           # CPU container
+    assert SB.resolve("reference") == "reference"
+    monkeypatch.setenv(SB.ENV_VAR, "reference")
+    assert SB.resolve("auto") == "reference"
+    assert SB.resolve("xla") == "xla"            # explicit name wins
+    monkeypatch.setenv(SB.ENV_VAR, "bogus")
+    with pytest.raises(ValueError, match="unknown solver backend"):
+        SB.resolve("auto")
+    with pytest.raises(ValueError, match="unknown solver backend"):
+        SB.resolve("bogus")
+
+
+def test_solve_single_scenario_explicit_backends(dists):
+    """solve(backend=...) routes through the batched machinery with S=1 and
+    unwraps to the same tables as the reference path."""
+    d = dists[0]
+    ref = C.solve(d, 30, grid_dt=GRID)
+    via_xla = C.solve(d, 30, grid_dt=GRID, backend="xla")
+    assert np.array_equal(ref.V, via_xla.V)
+    assert np.array_equal(ref.K, via_xla.K)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backend (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.pallas
+def test_pallas_interpret_within_tolerance(dists):
+    """The VMEM-resident kernel recomputes the probability grids on the fly,
+    so it is tolerance-tested (not bit-pinned) against the reference."""
+    job, grid = 24, 1.0 / 6.0
+    ref = C.solve_batch(dists, job, grid_dt=grid, n_sweeps=2,
+                        backend="reference")
+    pal = C.solve_batch(dists, job, grid_dt=grid, n_sweeps=2,
+                        backend="pallas")
+    assert pal.backend == "pallas"
+    np.testing.assert_allclose(pal.V, ref.V, rtol=1e-5, atol=1e-5)
+    # argmin ties may flip at ulp scale; demand near-total agreement
+    assert (pal.K == ref.K).mean() > 0.999
+
+
+@pytest.mark.pallas
+def test_pallas_warm_start_column_seed(dists):
+    """The kernel's warm start is the seed column V[:, :, 0] — sweeps couple
+    only through column 0, so one warm sweep from a 2-sweep V must land on
+    the 3-sweep solve (within kernel tolerance)."""
+    job, grid = 24, 1.0 / 6.0
+    cold2 = C.solve_batch(dists, job, grid_dt=grid, n_sweeps=2)
+    warm = C.solve_batch(dists, job, grid_dt=grid, n_sweeps=1,
+                         v_init=cold2.V, backend="pallas")
+    cold3 = C.solve_batch(dists, job, grid_dt=grid, n_sweeps=3)
+    np.testing.assert_allclose(warm.V, cold3.V, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scenario sharding
+# ---------------------------------------------------------------------------
+
+def test_sharding_single_device_mesh_transparent(dists, plain):
+    """An active 1-device mesh context engages the shard_map wrapper (the
+    'scenario' rule maps, S divides 1) without changing a bit."""
+    import jax
+    from jax.sharding import Mesh
+    from repro import sharding as sh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    with mesh, sh.use(mesh):
+        shd = C.solve_batch(dists, JOB, grid_dt=GRID)
+        ctf = C.solve_batch(dists, JOB, grid_dt=GRID, refine=True)
+    assert np.array_equal(plain.V, shd.V)
+    assert np.array_equal(plain.K, shd.K)
+    assert not ctf.refine_info["fallback"]
+    assert np.array_equal(plain.V, ctf.V)
+
+
+def test_sharding_no_mesh_returns_unwrapped():
+    fn = lambda x: (x,)
+    out, sharded = SB.shard_scenarios(fn, 8, 1, 1)
+    assert out is fn and not sharded
+
+
+@pytest.mark.slow
+def test_sharding_two_devices_bit_identical():
+    """Real shard_map over 2 forced host devices: the sharded S=4 solve
+    (plain and refined) must equal the unsharded single-device tables
+    bit-for-bit; an indivisible S=3 falls back transparently."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import json
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+        from repro import sharding as sh
+        from repro.core import distributions as D
+        from repro.core.policies import checkpointing as C
+        dists = [D.Exponential(mttf=8.0), D.Weibull(lam=0.12, k=0.8),
+                 D.constrained_for("n1-highcpu-16"), D.Exponential(mttf=16.0)]
+        plain = C.solve_batch(dists, 30, grid_dt=1.0 / 6.0, n_sweeps=2)
+        mesh = Mesh(np.array(jax.devices()).reshape(2), ("data",))
+        with mesh, sh.use(mesh):
+            shd = C.solve_batch(dists, 30, grid_dt=1.0 / 6.0, n_sweeps=2)
+            ctf = C.solve_batch(dists, 30, grid_dt=1.0 / 6.0, n_sweeps=2,
+                                refine=True)
+            p3 = C.solve_batch(dists[:3], 30, grid_dt=1.0 / 6.0, n_sweeps=2)
+        u3 = C.solve_batch(dists[:3], 30, grid_dt=1.0 / 6.0, n_sweeps=2)
+        print(json.dumps({
+            "devices": jax.device_count(),
+            "plain_eq": bool(np.array_equal(plain.V, shd.V)
+                             and np.array_equal(plain.K, shd.K)),
+            "refine_eq": bool(np.array_equal(plain.V, ctf.V)),
+            "refine_ok": bool(not ctf.refine_info["fallback"]),
+            "indivisible_eq": bool(np.array_equal(p3.V, u3.V)),
+        }))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result == {"devices": 2, "plain_eq": True, "refine_eq": True,
+                      "refine_ok": True, "indivisible_eq": True}
+
+
+# ---------------------------------------------------------------------------
+# FleetRuntime mid-sweep backend swap
+# ---------------------------------------------------------------------------
+
+def test_runtime_mid_sweep_backend_swap_pins_v_init(monkeypatch):
+    """Swapping the solver backend between refits must not disturb the
+    warm-start chain: the fixed point couples backends only through V, so
+    warm sweeps on a DIFFERENT backend continue the cold sweep sequence
+    bit-exactly (reference/xla/refined are interchangeable mid-loop)."""
+    cfg = dict(job_steps=40, grid_dt=0.25, window=128, refit_every=32,
+               min_samples=48, stream_block=128, regret_trials=32,
+               stream_vm_types=("n1-highcpu-2",), solver_backend="xla")
+    fr = rt.FleetRuntime(rt.RuntimeConfig(**cfg))
+    dists = fr._dists()
+    cold = fr.live_tables                      # n_sweeps=3 cold solve, xla
+    want = C.solve_batch(dists, cfg["job_steps"], grid_dt=cfg["grid_dt"],
+                         n_sweeps=3 + fr.cfg.warm_sweeps)
+    for swap in ({"solver_backend": "reference"},
+                 {"solver_backend": "auto", "solver_refine": True}):
+        fr.cfg = dataclasses.replace(fr.cfg, **swap)
+        tab = fr._solve(warm=True)             # warm_sweeps=2 from cold.V
+        assert fr._last_solve_warm, swap
+        assert np.array_equal(tab.V, want.V), swap
+        assert np.array_equal(tab.K, want.K), swap
+    assert np.array_equal(cold.V, fr.live_tables.V)  # swap did not publish
