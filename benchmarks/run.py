@@ -23,8 +23,8 @@ import traceback
 
 from . import (e2e_train, fig1_fit, fig5_wasted_work, fig6_scheduling,
                fig7_checkpointing, fig8_service, kernels_bench,
-               runtime_bench, scenario_sweep, sim_engine_bench, solver_bench,
-               tonks_lemma)
+               runtime_bench, scenario_sweep, service_bench, sim_engine_bench,
+               solver_bench, tonks_lemma)
 
 MODULES = [
     ("fig1_fit", fig1_fit),
@@ -33,6 +33,7 @@ MODULES = [
     ("fig7_checkpointing", fig7_checkpointing),
     ("fig8_service", fig8_service),
     ("sim_engine_bench", sim_engine_bench),
+    ("service", service_bench),
     ("scenario_sweep", scenario_sweep),
     ("solver", solver_bench),
     ("runtime", runtime_bench),

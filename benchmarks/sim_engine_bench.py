@@ -12,7 +12,7 @@ Covers the three hot paths the engine replaces:
 Besides the usual CSV rows, writes a machine-readable ``BENCH_simulation.json``
 at the repo root so the perf trajectory can be diffed across PRs:
 
-    {"schema": 1, "mode": "full"|"quick",
+    {"schema": 2, "mode": "full"|"quick",
      "checkpointing_executor": {"workload": {...}, "python_reference_s": ...,
                                 "vectorized_s": ..., "speedup": ...,
                                 "mean_makespan_python": ...,
@@ -20,7 +20,13 @@ at the repo root so the perf trajectory can be diffed across PRs:
      "batch_service": {"exact_reuse_s": ..., "table_reuse_s": ...,
                        "grid_cells": ..., "grid_s": ..., "per_cell_s": ...,
                        "cost_reduction_mean": ...},
-     "fleet_trace": {"n_vms": ..., "warm_s": ...}}
+     "fleet_trace": {"n_vms": ..., "warm_s": ...},
+     "service_kernel": {"fig8": {...}, "scale": {...},
+                        "one_dispatch": {...}}}
+
+Schema 2 adds the ``service_kernel`` block (measured by
+``benchmarks.service_bench``, which can also refresh just that block via
+``--only service``).
 
 ``--quick`` (or run(quick=True)) shrinks the workload so the module finishes
 in seconds; the JSON records which mode produced it.
@@ -121,13 +127,16 @@ def _bench_fleet(quick: bool) -> dict:
 
 
 def run(quick: bool = False):
+    from . import service_bench
+
     payload = {
-        "schema": 1,
+        "schema": 2,
         "mode": "quick" if quick else "full",
         "generated_unix": time.time(),
         "checkpointing_executor": _bench_executor(quick),
         "batch_service": _bench_service(quick),
         "fleet_trace": _bench_fleet(quick),
+        "service_kernel": service_bench.bench_block(quick),
     }
     write_bench_json("BENCH_simulation.json", payload,
                      emit_as="sim_engine/json")

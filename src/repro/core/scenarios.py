@@ -422,43 +422,85 @@ def sweep_service(scenarios: Iterable, *,
                   policies: Sequence[str] = ("model", "memoryless"),
                   cluster_sizes: Sequence[int] = (16,),
                   seeds: Sequence[int] = (0,), n_jobs: int = 40,
-                  job_hours: float = 2.0, jitter: float = 0.1, **kw) -> list:
+                  job_hours: float = 2.0, jitter: float = 0.1,
+                  mode: str = "serial", pool_size: int = 4096,
+                  deadline_hours=None, deflate_factor: float = 0.5,
+                  **kw) -> list:
     """Expand (scenario x policy x cluster_size x seed) over the batch
     service.  The model policy's reuse grids for ALL scenarios are folded
     into one :class:`engine.ReuseTables` tensor up front — a single vmapped
-    grid call, one backing allocation (the bag lengths depend only on the
-    seeds, so every scenario shares one remaining-work axis); each
-    scenario's cell group then goes through ``service.run_bag_grid`` with
-    its shared view of that tensor, keeping the event loops numpy-only.
+    grid call, one backing allocation shared by every cluster size (the bag
+    lengths depend only on the seeds, so every scenario shares one
+    remaining-work axis).
+
+    ``mode="serial"`` (ground truth) routes each scenario's cell group
+    through ``service.run_bag_grid`` with its shared view of that tensor,
+    keeping the event loops numpy-only; ``mode="batched"`` folds EVERY
+    (scenario x policy x cluster_size x seed) cell into ONE jitted
+    ``service_kernel`` dispatch — rows bit-identical to serial under x64
+    on the shared per-seed lifetime streams — and additionally supports
+    ``deadline_hours`` admission control and ``"+deflate"`` policies.
     Returns flat dict rows with the headline service metrics.
     """
+    from . import service_kernel
+    if mode not in ("serial", "batched"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "serial" and deadline_hours is not None:
+        raise ValueError("deadline admission control needs mode='batched'")
     scs = _resolve(scenarios)
-    tables = [None] * len(scs)
-    if "model" in policies and kw.get("vectorized_reuse", True):
-        dist_list = [sc.dist() for sc in scs]
+    policies = tuple(policies)
+    dist_list = [sc.dist() for sc in scs]
+    bases = [service_kernel.split_policy(p)[0] for p in policies]
+    tables = None
+    if "model" in bases and kw.get("vectorized_reuse", True):
         tables = engine.ReuseTables(
             dist_list,
             service_mod.grid_reuse_values(dist_list[0], seeds=tuple(seeds),
                                           n_jobs=n_jobs, job_hours=job_hours,
                                           jitter=jitter, **kw))
+
+    def _row(sc, cell):
+        r = cell["result"]
+        return dict(
+            sc.coords(), policy=cell["policy"],
+            cluster_size=cell["cluster_size"], seed=cell["seed"],
+            n_jobs=n_jobs, job_hours=job_hours,
+            makespan=r.makespan, vm_hours=r.vm_hours, cost=r.cost,
+            on_demand_cost=r.on_demand_cost,
+            cost_reduction=r.cost_reduction,
+            n_preemptions=r.n_preemptions,
+            n_job_failures=r.n_job_failures,
+            n_deflations=r.n_deflations, n_rejected=r.n_rejected,
+            job_failure_rate=r.n_job_failures / max(n_jobs, 1))
+
+    if mode == "batched":
+        lengths = {s: service_mod._bag_lengths(n_jobs, job_hours, jitter, s)
+                   for s in seeds}
+        cells = [dict(dist_index=si, vm_type=sc.vm_type, policy=policy,
+                      cluster_size=cs, seed=seed)
+                 for si, sc in enumerate(scs)
+                 for policy, cs, seed in itertools.product(
+                     policies, tuple(cluster_sizes), tuple(seeds))]
+        grid = service_kernel.run_cells_batched(
+            cells=cells, dists=dist_list, lengths_by_seed=lengths,
+            reuse_tables=tables, pool_size=pool_size,
+            deadline_hours=deadline_hours, deflate_factor=deflate_factor,
+            checkpointing=kw.get("checkpointing", False),
+            ckpt_interval=kw.get("ckpt_interval", 0.5),
+            ckpt_cost=kw.get("ckpt_cost", 1.0 / 60.0),
+            return_jobs=False)
+        per_sc = len(grid) // max(len(scs), 1)
+        return [_row(scs[i // per_sc], cell) for i, cell in enumerate(grid)]
+
     rows = []
-    for sc, table in zip(scs, tables):
-        dist = sc.dist()
+    for si, sc in enumerate(scs):
+        dist = dist_list[si]
         grid = service_mod.run_bag_grid(
-            vm_types=(sc.vm_type,), policies=tuple(policies),
+            vm_types=(sc.vm_type,), policies=policies,
             cluster_sizes=tuple(cluster_sizes), seeds=tuple(seeds),
             n_jobs=n_jobs, job_hours=job_hours, jitter=jitter,
-            dist_for=lambda _vm_type: dist, reuse_table=table, **kw)
-        for cell in grid:
-            r = cell["result"]
-            rows.append(dict(
-                sc.coords(), policy=cell["policy"],
-                cluster_size=cell["cluster_size"], seed=cell["seed"],
-                n_jobs=n_jobs, job_hours=job_hours,
-                makespan=r.makespan, vm_hours=r.vm_hours, cost=r.cost,
-                on_demand_cost=r.on_demand_cost,
-                cost_reduction=r.cost_reduction,
-                n_preemptions=r.n_preemptions,
-                n_job_failures=r.n_job_failures,
-                job_failure_rate=r.n_job_failures / max(n_jobs, 1)))
+            dist_for=lambda _vm_type: dist, pool_size=pool_size,
+            reuse_table=tables.view(si) if tables is not None else None,
+            **kw)
+        rows.extend(_row(sc, cell) for cell in grid)
     return rows

@@ -44,6 +44,40 @@ HOT_SPARE_HOURS = 1.0         # paper: keep stable VMs for one hour
 RELAUNCH_OVERHEAD = 2.0 / 60.0  # VM provisioning time
 
 
+def _normalize_dist(dist):
+    """Leaf-normalize a distribution (jnp arrays of the default float dtype)
+    so every sampler presents identical leaf dtypes to the shared
+    ``capped_icdf_draw`` jit cache — the same convention as
+    ``checkpointing.model_lifetimes_fn``, and a precondition for the batched
+    pools of ``service_kernel.draw_service_pool_batch`` reproducing the
+    serial stream bit-for-bit under x64."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(
+        lambda l: jnp.asarray(l, jnp.result_type(float)), dist)
+
+
+def draw_service_pool(dist, *, seed: Optional[int] = None, rng=None,
+                      size: int = 4096) -> np.ndarray:
+    """One up-front pooled lifetime draw for a service grid cell.
+
+    Consumes ``size`` uniforms from ``default_rng(seed)`` (or a caller's
+    ``rng``, advancing it) and inverts them through the shared
+    ``engine.capped_icdf_draw`` kernel — exactly the stream
+    ``BatchService._model_sampler`` consumes, so a pool drawn here and
+    passed as ``lifetime_pool=`` leaves the serial results unchanged while
+    letting many cells share one dispatch (see
+    ``service_kernel.draw_service_pool_batch`` for the deduplicated batch
+    form).
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    dist = _normalize_dist(dist)
+    u = rng.uniform(size=size)
+    fl = float(dist.cdf(dist.L))
+    return np.asarray(engine.capped_icdf_draw(dist, u, fl, float(dist.L)))
+
+
 @dataclasses.dataclass
 class Job:
     job_id: int
@@ -84,6 +118,8 @@ class ServiceResult:
     n_preemptions: int          # preemptions that hit a running job
     n_job_failures: int
     jobs: list = dataclasses.field(default_factory=list)
+    n_deflations: int = 0       # preemptions absorbed as capacity degradation
+    n_rejected: int = 0         # jobs denied admission (deadline misses)
 
     @property
     def cost_reduction(self) -> float:
@@ -103,7 +139,9 @@ class BatchService:
                  checkpointing: bool = False, ckpt_interval: float = 0.5,
                  ckpt_cost: float = 1.0 / 60.0,
                  reuse_table: Optional[engine.ReuseTable] = None,
-                 vectorized_reuse: bool = True):
+                 vectorized_reuse: bool = True,
+                 lifetime_pool: Optional[np.ndarray] = None,
+                 pool_size: int = 4096):
         self.dist = dist
         self.vm_type = vm_type
         self.cluster_size = cluster_size
@@ -119,6 +157,18 @@ class BatchService:
         self.reuse_table = reuse_table
         self.vectorized_reuse = vectorized_reuse
         self._run_reuse_table: Optional[engine.ReuseTable] = None
+        # up-front pooled lifetime stream: an externally drawn pool (from
+        # draw_service_pool[_batch] with THIS seed) is consumed first; the
+        # stream stays bit-identical to lazy in-loop draws because the
+        # sampler only ever takes n=1 and PCG64 uniforms are call-size
+        # invariant (two 4096-draws == one 8192-draw)
+        self.pool_size = int(pool_size)
+        if self.pool_size < 1:
+            raise ValueError("pool_size must be >= 1")
+        if lifetime_pool is not None:
+            self._pool = np.asarray(lifetime_pool, np.float64)
+            self._pool_pos = 0
+            self._pool_skip = len(self._pool)
 
     def _candidate_rem_values(self, lengths):
         """Every remaining-work value a job can present to the reuse policy:
@@ -135,15 +185,23 @@ class BatchService:
 
     _pool: Optional[np.ndarray] = None
     _pool_pos: int = 0
+    _pool_skip: int = 0   # uniforms an externally drawn pool consumed
 
     def _model_sampler(self, rng, n):
-        # batched inverse-CDF pool: one JAX dispatch per ~4096 draws,
-        # through the engine's shared (jit-cached) capped-draw kernel
+        # batched inverse-CDF pool: one JAX dispatch per ``pool_size`` draws
+        # (or zero when ``lifetime_pool`` was drawn up front), through the
+        # engine's shared (jit-cached) capped-draw kernel
+        if n > self.pool_size:
+            raise ValueError(f"sampler asked for {n} lifetimes at once; "
+                             f"pool_size is {self.pool_size}")
         if self._pool is None or self._pool_pos + n > len(self._pool):
-            u = rng.uniform(size=4096)
-            fl = float(self.dist.cdf(self.dist.L))
-            self._pool = engine.capped_icdf_draw(self.dist, u, fl,
-                                                 float(self.dist.L))
+            if self._pool_skip:
+                # realign this service's rng past the uniforms its external
+                # pool consumed, keeping the refill stream-continuous
+                rng.uniform(size=self._pool_skip)
+                self._pool_skip = 0
+            self._pool = draw_service_pool(self.dist, rng=rng,
+                                           size=self.pool_size)
             self._pool_pos = 0
         out = self._pool[self._pool_pos:self._pool_pos + n]
         self._pool_pos += n
@@ -358,43 +416,128 @@ def run_bag_grid(*, vm_types=("n1-highcpu-32",), policies=("model",),
                  cluster_sizes=(32,), seeds=(0,), n_jobs: int = 100,
                  job_hours: float = 2.0, jitter: float = 0.1, dist_for=None,
                  reuse_table: Optional[engine.ReuseTable] = None,
-                 **kw) -> list:
+                 mode: str = "serial", pool_size: int = 4096,
+                 deadline_hours: Optional[float] = None,
+                 deflate_factor: float = 0.5, **kw) -> list:
     """Sweep ``run_bag`` over the (policy x vm_type x cluster_size x seed)
     grid in one call, sharing the vectorized per-distribution work.
 
-    The model policy's reuse decisions for ALL bags of a VM type are
-    evaluated in a single jitted grid call (one :class:`engine.ReuseTable`
-    over the union of every seed's job lengths), so the per-cell event loops
-    run entirely in numpy.  A caller that already holds such a table (e.g.
-    ``scenarios.sweep_service``, which builds every scenario's grid in one
-    vmapped ``ReuseTable.batch`` call) can pass it as ``reuse_table``; it is
-    trusted to cover the grid's remaining-work values and must come from the
-    same distribution ``dist_for`` resolves (single-vm_type grids only).
-    Returns a list of dict rows with the grid coordinates and the
-    :class:`ServiceResult`.
+    The model policy's reuse decisions for the WHOLE grid are evaluated in
+    a single vmapped grid call — one :class:`engine.ReuseTables` tensor
+    over the union of every seed's job lengths, shared across all cluster
+    sizes, seeds and VM types (their distributions share the deadline
+    ``L``).  Lifetime pools are likewise drawn once per unique
+    ``(vm_type, seed)`` pair (``draw_service_pool_batch``) and handed to
+    each cell, so the serial event loops run entirely in numpy and both
+    sweep modes consume identical streams.  A caller that already holds a
+    table (e.g. ``scenarios.sweep_service``) can pass it as
+    ``reuse_table``; it is trusted to cover the grid's remaining-work
+    values and must come from the same distribution ``dist_for`` resolves
+    (single-vm_type grids only).
+
+    ``mode="batched"`` routes every cell through ONE jitted
+    ``service_kernel`` dispatch (bit-identical rows under x64); it also
+    unlocks the kernel-only policy branches — ``deadline_hours`` admission
+    control and ``"+deflate"``-suffixed policies (VM deflation at
+    ``deflate_factor``).  Returns a list of dict rows with the grid
+    coordinates and the :class:`ServiceResult`.
     """
+    from . import service_kernel  # deferred: service_kernel imports us
     dist_for = dist_for or dists.constrained_for
+    vm_types = tuple(vm_types)
     policies, cluster_sizes = tuple(policies), tuple(cluster_sizes)
     seeds = tuple(seeds)
-    if reuse_table is not None and len(tuple(vm_types)) != 1:
+    if mode not in ("serial", "batched"):
+        raise ValueError(f"unknown mode {mode!r}")
+    bases = [service_kernel.split_policy(p)[0] for p in policies]
+    if mode == "serial":
+        if deadline_hours is not None:
+            raise ValueError("deadline admission control needs "
+                             "mode='batched'")
+        if any(service_kernel.split_policy(p)[1] for p in policies):
+            raise ValueError("'+deflate' policies need mode='batched'")
+    if reuse_table is not None and len(vm_types) != 1:
         raise ValueError("a shared reuse_table implies a single-distribution "
                          "grid; pass one vm_type")
     lengths = {s: _bag_lengths(n_jobs, job_hours, jitter, s) for s in seeds}
+    dist_list = [dist_for(vt) for vt in vm_types]
+
+    # one ReuseTables build for the WHOLE grid (all cluster sizes, seeds
+    # and VM types), not one table per vm_type — their dists share L
+    tables = None
+    table_views = None
+    if reuse_table is not None:
+        tables = _tables_from_view(reuse_table)
+        table_views = [reuse_table]
+    elif "model" in bases and kw.get("vectorized_reuse", True):
+        values = grid_reuse_values(
+            dist_list[0], seeds=seeds, n_jobs=n_jobs, job_hours=job_hours,
+            jitter=jitter, vm_type=vm_types[0], **kw)
+        Ls = [float(np.asarray(d.L).reshape(-1)[0]) for d in dist_list]
+        if max(Ls) - min(Ls) <= 1e-12:
+            tables = engine.ReuseTables(dist_list, values)
+            table_views = [tables.view(ti) for ti in range(len(vm_types))]
+        elif mode == "batched":
+            raise ValueError("mode='batched' folds all vm_types into one "
+                             "reuse tensor and needs a shared deadline L")
+        else:
+            table_views = [engine.ReuseTable(d, values) for d in dist_list]
+
+    if mode == "batched":
+        unsupported = set(kw) - {"checkpointing", "ckpt_interval",
+                                 "ckpt_cost", "vectorized_reuse"}
+        if unsupported:
+            raise ValueError(f"mode='batched' does not support "
+                             f"{sorted(unsupported)}")
+        if tables is None and "model" in bases:
+            raise ValueError("mode='batched' model cells need vectorized "
+                             "reuse tables (vectorized_reuse=True)")
+        cells = [dict(dist_index=di, vm_type=vt, policy=policy,
+                      cluster_size=cs, seed=seed)
+                 for di, vt in enumerate(vm_types)
+                 for policy, cs, seed in itertools.product(
+                     policies, cluster_sizes, seeds)]
+        return service_kernel.run_cells_batched(
+            cells=cells, dists=dist_list, lengths_by_seed=lengths,
+            reuse_tables=tables, pool_size=pool_size,
+            deadline_hours=deadline_hours, deflate_factor=deflate_factor,
+            checkpointing=kw.get("checkpointing", False),
+            ckpt_interval=kw.get("ckpt_interval", 0.5),
+            ckpt_cost=kw.get("ckpt_cost", 1.0 / 60.0),
+            return_jobs=n_jobs <= 2048)
+
+    pools = None
+    if "lifetimes_fn" not in kw:
+        pairs = [(ti, s) for ti in range(len(vm_types)) for s in seeds]
+        pool_mat = service_kernel.draw_service_pool_batch(
+            [dist_list[ti] for ti, _ in pairs], [s for _, s in pairs],
+            size=pool_size)
+        pools = {(vm_types[ti], s): pool_mat[i]
+                 for i, (ti, s) in enumerate(pairs)}
     rows = []
-    for vm_type in vm_types:
-        dist = dist_for(vm_type)
-        table = reuse_table
-        if table is None and "model" in policies \
-                and kw.get("vectorized_reuse", True):
-            table = engine.ReuseTable(dist, grid_reuse_values(
-                dist, seeds=seeds, n_jobs=n_jobs, job_hours=job_hours,
-                jitter=jitter, vm_type=vm_type, **kw))
+    for ti, vm_type in enumerate(vm_types):
+        dist = dist_list[ti]
+        table = table_views[ti] if table_views is not None else None
         for policy, cs, seed in itertools.product(policies, cluster_sizes,
                                                   seeds):
             svc = BatchService(
                 dist, vm_type=vm_type, cluster_size=cs, policy=policy,
                 seed=seed, reuse_table=table if policy == "model" else None,
-                **kw)
+                pool_size=pool_size,
+                lifetime_pool=(None if pools is None
+                               else pools[(vm_type, seed)]), **kw)
             rows.append(dict(vm_type=vm_type, policy=policy, cluster_size=cs,
                              seed=seed, result=svc.run(lengths[seed])))
     return rows
+
+
+def _tables_from_view(table: engine.ReuseTable) -> engine.ReuseTables:
+    """Lift a single :class:`engine.ReuseTable` view into a one-entry
+    :class:`engine.ReuseTables`-shaped batch (shared backing array)."""
+    out = engine.ReuseTables.__new__(engine.ReuseTables)
+    out._dists = [None]
+    out.T_values = table.T_values
+    out.L = table.L
+    out.n_age = table.n_age
+    out.tables = np.asarray(table.table)[None]
+    return out
