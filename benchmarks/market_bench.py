@@ -1,0 +1,134 @@
+"""Spot-market benchmark: dollar-denominated policy evaluation.
+
+Runs ``scenarios.sweep_market`` over the default (zone x phase x vm_type)
+grid under both market regimes — calm, and a capacity crunch scheduled on
+the tight zone — and records what each cost policy (fixed / cheapest /
+migrate) actually pays, in dollars, against the seeded OU price traces.
+The DP tables are solved once per regime through
+``scenarios.solve_market_tables`` and reused through ``tables=`` for every
+policy/seed re-evaluation (the PR-4 whole-grid reuse contract).
+
+``BENCH_market.json`` (repo root, see docs/bench_schemas.md) records::
+
+    {"schema": 1, "mode": "full"|"quick", "generated_unix": ...,
+     "grid": {...workload coordinates...},
+     "wall_clock_s": ...,
+     "expected_dollars": {regime: {policy: mean over scenario rows}},
+     "crunch_vs_calm": {policy: crunch/calm expected-dollar ratio},
+     "policy_vs_fixed_crunch": {policy: policy/fixed ratio on crunch rows},
+     "agreement": {"rows_bitexact_x64": ..., "x64_check_n_trials": ...},
+     "acceptance": {"cost_aware_beats_fixed_crunch": ...},
+     "rows": [...per (scenario x regime x policy x seed) row...]}
+
+``agreement.rows_bitexact_x64`` re-runs a reduced sweep under x64 through
+BOTH cost paths (the batched ``engine.accumulate_price_cost`` gather and
+the serial ``market.integrate_cost_ref`` loop) and asserts every row's
+dollars match bit-for-bit — the acceptance criterion that the batched cost
+rows are x64 bit-identical to the serial reference.
+"""
+from __future__ import annotations
+
+import time
+
+from jax.experimental import enable_x64
+
+from repro.core import market as M
+from repro.core import scenarios as SC
+
+from .common import emit, write_bench_json
+
+REGIMES = ("calm", "crunch")
+POLICIES = ("fixed", "cheapest", "migrate")
+
+
+def _mean(vals):
+    vals = [v for v in vals if v == v]      # drop NaN
+    return sum(vals) / len(vals) if vals else float("nan")
+
+
+def _aggregate(rows):
+    by = {}
+    for r in rows:
+        by.setdefault((r["regime"], r["policy"]), []).append(
+            r["expected_dollars"])
+    return {reg: {pol: _mean(by.get((reg, pol), []))
+                  for pol in POLICIES} for reg in REGIMES}
+
+
+def run(quick: bool = False) -> dict:
+    job_steps = 60 if quick else 300
+    n_trials = 60 if quick else 400
+    seeds = (0,) if quick else (0, 1)
+    scs = SC.default_grid()
+    market = M.MarketModel.for_scenarios(scs)
+
+    t0 = time.perf_counter()
+    tables = SC.solve_market_tables(scs, market, regimes=REGIMES,
+                                    job_steps=job_steps)
+    solve_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rows = SC.sweep_market(scs, market=market, regimes=REGIMES,
+                           policies=POLICIES, seeds=seeds,
+                           job_steps=job_steps, n_trials=n_trials,
+                           tables=tables)
+    sweep_s = time.perf_counter() - t0
+
+    agg = _aggregate(rows)
+    crunch_vs_calm = {pol: (agg["crunch"][pol] / agg["calm"][pol]
+                            if agg["calm"][pol] else float("nan"))
+                      for pol in POLICIES}
+    vs_fixed = {pol: (agg["crunch"][pol] / agg["crunch"]["fixed"]
+                      if agg["crunch"]["fixed"] else float("nan"))
+                for pol in POLICIES}
+
+    # the acceptance criterion: on every scenario leaf that actually has a
+    # crunch scheduled, the cost-aware policy pays less than fixed
+    fixed_d = {(r["scenario"], r["seed"]): r["expected_dollars"]
+               for r in rows if r["regime"] == "crunch"
+               and r["policy"] == "fixed" and r["crunch"]}
+    cheap_d = {(r["scenario"], r["seed"]): r["expected_dollars"]
+               for r in rows if r["regime"] == "crunch"
+               and r["policy"] == "cheapest" and r["crunch"]}
+    beats = bool(fixed_d) and all(cheap_d[k] < fixed_d[k] for k in fixed_d)
+
+    # x64 bit-identity: batched gather vs serial reference, row for row
+    x64_trials = 40 if quick else 100
+    with enable_x64():
+        kw = dict(market=market, regimes=REGIMES, policies=POLICIES,
+                  seeds=(0,), job_steps=min(job_steps, 120),
+                  n_trials=x64_trials)
+        rk = SC.sweep_market(scs, cost_path="kernel", **kw)
+        rr = SC.sweep_market(scs, cost_path="reference", **kw)
+    bitexact = all(
+        a["expected_dollars"] == b["expected_dollars"]
+        or (a["expected_dollars"] != a["expected_dollars"]
+            and b["expected_dollars"] != b["expected_dollars"])
+        for a, b in zip(rk, rr))
+
+    payload = dict(
+        schema=1,
+        mode="quick" if quick else "full",
+        generated_unix=int(time.time()),
+        grid=dict(
+            scenarios=[sc.name for sc in scs], regimes=list(REGIMES),
+            policies=list(POLICIES), seeds=list(seeds),
+            job_steps=job_steps, n_trials=n_trials,
+            horizon_hours=market.horizon, price_dt=market.dt,
+            market_seed=market.seed),
+        wall_clock_s=dict(solve=solve_s, sweep=sweep_s),
+        expected_dollars=agg,
+        crunch_vs_calm=crunch_vs_calm,
+        policy_vs_fixed_crunch=vs_fixed,
+        agreement=dict(rows_bitexact_x64=bitexact,
+                       x64_check_n_trials=x64_trials),
+        acceptance=dict(cost_aware_beats_fixed_crunch=beats),
+        rows=rows)
+    write_bench_json("BENCH_market.json", payload, emit_as="market_json")
+    emit("market_sweep", sweep_s * 1e6,
+         f"cheapest/fixed_crunch={vs_fixed['cheapest']:.3f} "
+         f"bitexact={bitexact} beats_fixed={beats}")
+    if not bitexact:
+        raise AssertionError(
+            "market dollars: batched gather diverged from the serial "
+            "reference under x64")
+    return payload

@@ -22,7 +22,7 @@ import sys
 import traceback
 
 from . import (e2e_train, fig1_fit, fig5_wasted_work, fig6_scheduling,
-               fig7_checkpointing, fig8_service, kernels_bench,
+               fig7_checkpointing, fig8_service, kernels_bench, market_bench,
                runtime_bench, scenario_sweep, service_bench, sim_engine_bench,
                solver_bench, tonks_lemma)
 
@@ -35,6 +35,7 @@ MODULES = [
     ("sim_engine_bench", sim_engine_bench),
     ("service", service_bench),
     ("scenario_sweep", scenario_sweep),
+    ("market", market_bench),
     ("solver", solver_bench),
     ("runtime", runtime_bench),
     ("tonks_lemma", tonks_lemma),

@@ -255,6 +255,28 @@ class Constrained(_DistBase):
         return t
 
 
+def capped_constrained(base, *, A_scale, tau1_scale) -> "Constrained":
+    """Scale a Constrained-parameterized model's early phase (``A``, ``tau1``)
+    while keeping the raw Eq. 1 CDF proper (<= 1) up to the deadline.
+
+    This is THE modulation primitive every exogenous hazard coupling goes
+    through: :meth:`DiurnalConstrained.effective` (launch-phase modulation)
+    and ``market.crunch_effective`` (capacity-crunch coupling) both apply
+    their scale factors here, so the properness cap — without which the
+    clipped CDF would saturate before ``L`` while the closed-form pdf stayed
+    positive, breaking the pdf == d(cdf)/dt contract the DP solver relies
+    on — is enforced identically everywhere.  The cap never pushes ``A``
+    *below* the base fit (``jnp.maximum(cap, A)``), so a boost can saturate
+    but never invert.  ``base`` needs ``tau1/tau2/b/A/L`` fields; the result
+    is always a plain :class:`Constrained`.
+    """
+    tau1 = jnp.maximum(base.tau1 * tau1_scale, 0.05)
+    cap = (1.0 - 1e-3) / (1.0 - _exp(-base.L / tau1)
+                          + _exp((base.L - base.b) / base.tau2))
+    A = jnp.clip(base.A * A_scale, 1e-3, jnp.maximum(cap, base.A))
+    return Constrained(tau1=tau1, tau2=base.tau2, b=base.b, A=A, L=base.L)
+
+
 @_dist
 class DiurnalConstrained(_DistBase):
     """Obs. 5 launch-phase-modulated constrained model.
@@ -310,12 +332,8 @@ class DiurnalConstrained(_DistBase):
         for large-A types the day-phase severity comes mostly from ``tau1``.
         """
         m = self.modulation()
-        tau1 = jnp.maximum(self.tau1 * (1.0 - self.amp_tau1 * m), 0.05)
-        cap = (1.0 - 1e-3) / (1.0 - _exp(-self.L / tau1)
-                              + _exp((self.L - self.b) / self.tau2))
-        A = jnp.clip(self.A * (1.0 + self.amp_A * m), 1e-3,
-                     jnp.maximum(cap, self.A))
-        return Constrained(tau1=tau1, tau2=self.tau2, b=self.b, A=A, L=self.L)
+        return capped_constrained(self, A_scale=1.0 + self.amp_A * m,
+                                  tau1_scale=1.0 - self.amp_tau1 * m)
 
     def cdf(self, t):
         return self.effective().cdf(t)

@@ -328,6 +328,65 @@ def draw_lifetime_pool_batch(dists, n_trials: int, *, max_restarts: int = 64,
 
 
 # ---------------------------------------------------------------------------
+# market dollars: the price-grid gather
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _price_cost_kernel(prices, cum, sidx, m, dt):
+    """Batched gather for ``integral_0^m p`` against a precomputed ``(S, T)``
+    price grid: ``k = floor(m/dt)`` (tail-clamped) per trial, returning
+    ``(cum[s, k], prices[s, k], k)``.  The kernel deliberately stops at the
+    gathers — the partial-cell arithmetic ``cum + prices * (m - k*dt)`` runs
+    in host float64 (``accumulate_price_cost``): inside the fused kernel
+    XLA:CPU contracts the multiply-subtract / multiply-add pairs into FMAs
+    that round once where the serial reference
+    ``market.integrate_cost_ref`` rounds twice — 1-ulp mismatches that break
+    the x64 bit-identity contract (``lax.optimization_barrier`` does not
+    reliably stop the contraction).  Like ``_capped_icdf_kernel``, this is
+    ONE module-level jitted kernel taking its tensors as arguments: the
+    compiled gather is cached per shape/dtype, never re-traced per sweep
+    (``tests/test_market.py`` spies on it)."""
+    Tn = prices.shape[1]
+    m0 = jnp.where(jnp.isnan(m), 0.0, m)
+    k = jnp.clip(jnp.floor(m0 / dt).astype(jnp.int32), 0, Tn - 1)
+    s = sidx[:, None]
+    return cum[s, k], prices[s, k], k
+
+
+def accumulate_price_cost(grid, makespans, price_index=None) -> np.ndarray:
+    """Dollars per trial for ``(B, n_trials)`` makespans billed against a
+    ``market.PriceGrid``: lane ``b`` integrates price row
+    ``price_index[b]`` (identity when omitted) over ``[0, m)``.  NaN
+    makespans (unfinished trials) stay NaN.  The whole batch is one jitted
+    gather dispatch; under x64 every element is bit-identical to the
+    retained serial reference ``market.integrate_cost_ref`` — the
+    established reference/production contract (see the module docstring).
+    """
+    m = np.atleast_2d(np.asarray(makespans, np.float64))
+    B = m.shape[0]
+    if price_index is None:
+        price_index = np.arange(B, dtype=np.int32)
+    sidx = np.broadcast_to(np.asarray(price_index, np.int32), (B,))
+    if sidx.size and (sidx.min() < 0 or sidx.max() >= len(grid.prices)):
+        raise ValueError("price_index out of range for the price grid")
+    dtype = jnp.result_type(float)
+    base, pk, k = _price_cost_kernel(
+        jnp.asarray(grid.prices, dtype), jnp.asarray(grid.cum, dtype),
+        jnp.asarray(sidx), jnp.asarray(m, dtype),
+        jnp.asarray(float(grid.dt), dtype))
+    # partial-cell arithmetic in host float64 — the same IEEE rounding
+    # sequence as the serial reference's
+    # ``cum[k] + prices[k] * (m - k*dt)`` (see the kernel docstring)
+    base = np.asarray(base, np.float64)
+    pk = np.asarray(pk, np.float64)
+    kf = np.asarray(k, np.int64).astype(np.float64)
+    frac = m - kf * np.float64(grid.dt)
+    out = base + pk * frac
+    out[np.isnan(m)] = np.nan
+    return out if np.ndim(makespans) > 1 else out[0]
+
+
+# ---------------------------------------------------------------------------
 # the event kernel
 # ---------------------------------------------------------------------------
 
@@ -468,7 +527,8 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
                             max_events: int | None = None,
                             unfinished: str = "nan",
                             return_finished: bool = False,
-                            table_index=None, pool_index=None):
+                            table_index=None, pool_index=None,
+                            price=None, price_index=None):
     """Vectorized executor over a shared pre-drawn lifetime pool.
 
     Semantics are identical to the Python reference
@@ -509,6 +569,15 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
 
     ``return_finished=True`` additionally returns the boolean completion mask
     (shape ``(n_trials,)``), regardless of ``unfinished`` mode.
+
+    Market dollars (``price=``): a ``market.PriceGrid`` bills every trial's
+    makespan — the checkpointing executor runs one VM at a time, so a
+    trial's vm_hours IS its makespan — by integrating its price row over
+    ``[0, m)`` through :func:`accumulate_price_cost` (one batched gather
+    against the precomputed grid; ``price_index`` maps cells to grid rows,
+    identity when omitted).  The dollars array is appended to the return
+    value: ``(mk, dollars)``, or ``(mk, finished, dollars)`` with
+    ``return_finished=True``.  NaN-flagged trials cost NaN.
     """
     if unfinished not in ("nan", "partial", "raise"):
         raise ValueError(f"unfinished must be 'nan', 'partial' or 'raise', "
@@ -581,9 +650,16 @@ def simulate_makespan_batch(policy_table, job_steps: int, *, first, pool,
                 f"max_events={max_events})")
         if unfinished == "nan":
             out = np.where(finished, out, np.nan)
+    if price is None:
+        if price_index is not None:
+            raise ValueError("price_index needs price= (a market.PriceGrid)")
+        if return_finished:
+            return out, finished
+        return out
+    dollars = accumulate_price_cost(price, out, price_index)
     if return_finished:
-        return out, finished
-    return out
+        return out, finished, dollars
+    return out, dollars
 
 
 def simulate_makespan_engine(policy_table, lifetimes_fn, job_steps: int, *,

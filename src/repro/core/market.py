@@ -1,0 +1,367 @@
+"""Spot-market price & capacity dynamics: dollar-denominated policy evaluation.
+
+The paper's headline result is *cost* — model-driven policies cut deployment
+cost ~5x on transient VMs — yet a fixed per-VM-type price cannot rank
+policies under the moving prices and capacity crunches that break them in
+production (the CloudSim-Plus spot-market study and Voorsluys et al.'s
+virtual-cluster provisioning both model exactly this dimension; see
+PAPERS.md).  This module adds the market layer on the batched substrate:
+
+* :class:`PriceProcess` — a seeded, deterministic mean-reverting OU process
+  on *log* price per (zone, vm_type) scenario leaf, with scheduled
+  capacity-crunch episodes (a log-price lift over ``[crunch_t0,
+  crunch_t1)``, optionally periodic).  It is a ``_dist``-registered frozen
+  dataclass pytree, so ``distributions.stack``/``unstack`` put the same
+  leading ``(S,)`` scenario axis on its parameter leaves that every other
+  batched entry point uses.
+* :func:`crunch_effective` — the crunch -> Eq. 1 coupling: a capacity
+  crunch scales ``A`` up and ``tau1`` down *through the same properness
+  cap* as ``DiurnalConstrained``'s launch-phase modulation
+  (``distributions.capped_constrained``), so a crunch-boosted model can
+  saturate the cap but never produce an improper CDF.
+* :class:`PriceGrid` — the precomputed ``(S, T)`` price grid plus its
+  cumulative-dollar grid ``cum[s, k] = integral_0^{k*dt} p_s``, the tensor
+  both cost paths gather against.
+* :func:`integrate_cost_ref` — the retained serial numpy reference for the
+  dollar integral.  Bit-exactness contract (PR-4/PR-7 lineage): the batched
+  gather ``engine.accumulate_price_cost`` must reproduce this scalar
+  arithmetic bit-for-bit under x64 on shared makespans — same ``cum``
+  gather, same ``base + price * frac`` expression tree (enforced by
+  ``tests/test_market.py`` / ``tests/test_batched.py``).
+* :class:`MarketModel` / :class:`PriceFeed` — the sweep-facing bundle
+  (per-scenario processes sharing one horizon/dt/seed) and the closed-loop
+  runtime's live ticker (``FleetRuntime(price_feed=...)`` bills every
+  streamed lifetime at its launch price).
+
+Billing convention: a VM (or job attempt) starting at wall-clock ``t`` pays
+``integral_t^{t+m} p(u) du`` along the trace — discretized on the grid, with
+the tail beyond the horizon billed at the last cell's price.  The *service*
+loops bill each ``vm_hours`` increment at the owning VM's launch-cell price
+(spot-style hour-start billing), which keeps the serial heap loop and the
+event-synchronous kernel bit-identical without tracking per-VM price
+integrals.  See ``docs/market.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import distributions as dists
+from .distributions import _dist
+
+__all__ = [
+    "PriceProcess", "PriceGrid", "MarketModel", "PriceFeed",
+    "spot_price_process", "crunch_effective", "crunch_profile",
+    "price_trace", "integrate_cost_ref", "MARKET_ZONE_PARAMS",
+    "DEFAULT_HORIZON_HOURS", "DEFAULT_PRICE_DT",
+]
+
+DEFAULT_HORIZON_HOURS = 48.0
+DEFAULT_PRICE_DT = 0.1          # price-grid resolution (hours)
+
+# Zone price levels relative to the type's base preemptible price: a tighter
+# market (higher A_scale in scenarios.ZONE_PARAMS) clears at a premium, a
+# slacker one at a discount.  us-east1-b is the identity zone, matching the
+# paper's fits.
+MARKET_ZONE_PARAMS = {
+    "us-east1-b": dict(price_scale=1.00),
+    "us-central1-a": dict(price_scale=1.12),
+    "europe-west1-d": dict(price_scale=0.94),
+}
+
+
+@_dist
+class PriceProcess:
+    """Mean-reverting OU log-price with scheduled capacity-crunch episodes.
+
+    ``log p`` follows the exact OU discretization ``x_{k+1} = mu + (x_k -
+    mu) * e^{-theta*dt} + sd(dt) * z_k`` and the published price is
+    ``exp(x + crunch_amp * c(t))`` with ``c(t)`` the crunch intensity —
+    strictly positive by construction.  A crunch also couples into the
+    Eq. 1 early-hazard through :func:`crunch_effective`: at full intensity
+    ``A`` is scaled by ``crunch_A`` and ``tau1`` by ``crunch_tau1``
+    (capacity pressure preempts younger VMs faster), capped by
+    ``distributions.capped_constrained`` so the fit stays proper.
+
+    All fields are pytree leaves, so ``distributions.stack`` /``unstack``
+    give the standard ``(S,)`` leading-axis form.
+    """
+
+    mu: jnp.ndarray = -2.0        # long-run mean log price (log USD/h)
+    sigma: jnp.ndarray = 0.08     # OU volatility (log-price units)
+    theta: jnp.ndarray = 0.35     # mean-reversion rate (1/h)
+    p0: jnp.ndarray = 0.135       # initial price (USD/h)
+    crunch_t0: jnp.ndarray = 0.0  # crunch window start (h); t1 <= t0 disables
+    crunch_t1: jnp.ndarray = 0.0  # crunch window end (h)
+    crunch_period: jnp.ndarray = 0.0  # repeat period (h); 0 = single episode
+    crunch_amp: jnp.ndarray = 0.9     # log-price lift at full crunch
+    crunch_A: jnp.ndarray = 1.6       # Eq. 1 A scale at full crunch
+    crunch_tau1: jnp.ndarray = 0.6    # Eq. 1 tau1 scale at full crunch
+
+    def crunch_intensity(self, t):
+        """Crunch indicator in [0, 1] at wall-clock hour(s) ``t``."""
+        c0, c1, per = map(np.float64, (self.crunch_t0, self.crunch_t1,
+                                       self.crunch_period))
+        t = np.asarray(t, np.float64)
+        if c1 <= c0:
+            return np.zeros_like(t)
+        tt = np.mod(t, per) if per > 0 else t
+        return ((tt >= c0) & (tt < c1)).astype(np.float64)
+
+
+def crunch_profile(proc: PriceProcess, times) -> np.ndarray:
+    """``proc.crunch_intensity`` over an array of wall-clock hours."""
+    return proc.crunch_intensity(np.asarray(times, np.float64))
+
+
+def crunch_effective(dist, proc: PriceProcess, t_launch: float = 0.0):
+    """The crunch -> Eq. 1 early-hazard coupling, resolved at VM launch.
+
+    Mirrors ``DiurnalConstrained.effective`` exactly: the crunch intensity
+    ``c`` at launch scales ``A`` by ``1 + (crunch_A - 1) * c`` and ``tau1``
+    by ``1 - (1 - crunch_tau1) * c``, through the shared
+    ``distributions.capped_constrained`` properness cap.  ``c = 0`` passes
+    the launch-phase-resolved base model through unchanged, so calm-regime
+    tables solved from this function equal plain ``dist.effective()``
+    tables.
+    """
+    base = dist.effective() if hasattr(dist, "effective") else dist
+    c = float(proc.crunch_intensity(float(t_launch)))
+    A_scale = 1.0 + (float(np.float64(proc.crunch_A)) - 1.0) * c
+    tau1_scale = 1.0 - (1.0 - float(np.float64(proc.crunch_tau1))) * c
+    return dists.capped_constrained(base, A_scale=A_scale,
+                                    tau1_scale=tau1_scale)
+
+
+def price_trace(proc: PriceProcess, *, horizon: float = DEFAULT_HORIZON_HOURS,
+                dt: float = DEFAULT_PRICE_DT, seed: int = 0,
+                leaf: int = 0) -> np.ndarray:
+    """One deterministic ``(T,)`` price trace (USD/h, float64).
+
+    The noise stream is ``default_rng(SeedSequence([seed, leaf]))`` — one
+    independent, reproducible stream per (sweep seed, scenario leaf), so
+    re-drawing with the same arguments is bit-identical and leaves never
+    share noise.  Host-side numpy float64 throughout: the trace is an
+    *input* tensor to both cost paths, so its generation must not depend on
+    the session dtype.
+    """
+    T = int(round(horizon / dt))
+    if T < 1:
+        raise ValueError(f"horizon/dt gives an empty grid ({horizon}/{dt})")
+    mu, sigma, theta = (float(np.float64(proc.mu)),
+                        float(np.float64(proc.sigma)),
+                        float(np.float64(proc.theta)))
+    p0 = float(np.float64(proc.p0))
+    if p0 <= 0.0:
+        raise ValueError(f"p0 must be positive, got {p0}")
+    rng = np.random.default_rng(np.random.SeedSequence([int(seed), int(leaf)]))
+    z = rng.standard_normal(T - 1)
+    a = np.exp(-theta * dt)
+    sd = (sigma * np.sqrt((1.0 - a * a) / (2.0 * theta)) if theta > 0
+          else sigma * np.sqrt(dt))
+    x = np.empty(T, np.float64)
+    x[0] = np.log(p0)
+    for k in range(T - 1):
+        x[k + 1] = mu + (x[k] - mu) * a + sd * z[k]
+    c = crunch_profile(proc, dt * np.arange(T, dtype=np.float64))
+    return np.exp(x + float(np.float64(proc.crunch_amp)) * c)
+
+
+def spot_price_process(zone: str = "us-east1-b",
+                       vm_type: str = "n1-highcpu-16",
+                       **overrides) -> PriceProcess:
+    """The catalog (zone, vm_type) leaf: the 2019 preemptible list price
+    scaled by the zone's market level, as both the initial price and the
+    OU long-run mean.  ``overrides`` set any :class:`PriceProcess` field
+    (schedule a crunch with ``crunch_t0``/``crunch_t1``)."""
+    from .service import PRICES_PREEMPTIBLE
+    base = (PRICES_PREEMPTIBLE[vm_type]
+            * MARKET_ZONE_PARAMS[zone]["price_scale"])
+    kw = dict(mu=np.log(base), p0=base)
+    kw.update(overrides)
+    return PriceProcess(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class PriceGrid:
+    """The precomputed tensors both cost paths gather against.
+
+    ``prices[s, k]`` is leaf ``s``'s price on ``[k*dt, (k+1)*dt)`` and
+    ``cum[s, k] = sum_{i<k} prices[s, i] * dt`` the dollars of running one
+    VM over ``[0, k*dt)`` — host numpy float64, computed ONCE and shared by
+    the batched kernel and the serial reference so neither re-derives the
+    cumulative sum (cumsum order would otherwise be a bit-exactness
+    hazard).  ``shift`` re-anchors the grid at a later launch time; tail
+    cells beyond the horizon are billed at the last cell's price.
+    """
+    prices: np.ndarray           # (S, T) float64
+    cum: np.ndarray              # (S, T+1) float64
+    dt: float
+
+    @staticmethod
+    def from_prices(prices, dt: float) -> "PriceGrid":
+        prices = np.atleast_2d(np.asarray(prices, np.float64))
+        if not np.all(prices > 0.0):
+            raise ValueError("price grid must be strictly positive")
+        cum = np.zeros((prices.shape[0], prices.shape[1] + 1), np.float64)
+        np.cumsum(prices * dt, axis=1, out=cum[:, 1:])
+        return PriceGrid(prices=prices, cum=cum, dt=float(dt))
+
+    @property
+    def horizon(self) -> float:
+        return self.prices.shape[1] * self.dt
+
+    def __len__(self) -> int:
+        return self.prices.shape[0]
+
+    def shift(self, t0: float) -> "PriceGrid":
+        """The grid as seen from launch time ``t0``: row ``k`` becomes row
+        ``k0 + k`` (clamped to the last cell), so integrals from a late
+        launch reuse the same from-zero gather kernel."""
+        k0 = int(np.floor(float(t0) / self.dt))
+        T = self.prices.shape[1]
+        idx = np.minimum(np.arange(T) + max(k0, 0), T - 1)
+        return PriceGrid.from_prices(self.prices[:, idx], self.dt)
+
+    def price_at(self, t) -> np.ndarray:
+        """``(S,)`` prices at wall-clock hour ``t`` (tail-clamped)."""
+        k = min(int(np.floor(float(t) / self.dt)), self.prices.shape[1] - 1)
+        return self.prices[:, max(k, 0)]
+
+
+def integrate_cost_ref(prices_row, cum_row, dt: float, makespan) -> float:
+    """THE serial dollar integral: ``integral_0^m p`` for one trial.
+
+    Scalar numpy float64 arithmetic — ``cum[k] + prices[k] * (m - k*dt)``
+    with ``k = floor(m/dt)`` clamped to the last cell (the tail beyond the
+    horizon bills at the final price).  The batched gather
+    ``engine.accumulate_price_cost`` must reproduce this expression
+    bit-for-bit under x64; NaN makespans (unfinished trials) yield NaN
+    dollars in both paths.
+    """
+    m = float(makespan)
+    if np.isnan(m):
+        return float("nan")
+    T = len(prices_row)
+    k = min(max(int(np.floor(m / dt)), 0), T - 1)
+    base = np.float64(cum_row[k])
+    frac = np.float64(m) - np.float64(k) * np.float64(dt)
+    return float(base + np.float64(prices_row[k]) * frac)
+
+
+@dataclasses.dataclass
+class MarketModel:
+    """Per-scenario price processes sharing one (horizon, dt, seed) grid.
+
+    ``processes[s]`` prices scenario leaf ``s`` of the sweep it was built
+    for; :meth:`grid` materializes (and caches) the ``(S, T)``
+    :class:`PriceGrid`.  The leaf order IS the scenario order — keep them
+    aligned exactly like ``BatchDPTables``.
+    """
+    processes: list
+    horizon: float = DEFAULT_HORIZON_HOURS
+    dt: float = DEFAULT_PRICE_DT
+    seed: int = 0
+    _grid: Optional[PriceGrid] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @classmethod
+    def for_scenarios(cls, scenarios: Sequence, *,
+                      crunch_zones: Sequence[str] = ("us-central1-a",),
+                      crunch_window: tuple = (8.0, 16.0),
+                      crunch_amp: float = 0.9, crunch_A: float = 1.6,
+                      crunch_tau1: float = 0.6,
+                      horizon: float = DEFAULT_HORIZON_HOURS,
+                      dt: float = DEFAULT_PRICE_DT, seed: int = 0,
+                      **proc_overrides) -> "MarketModel":
+        """The default market for a scenario list: one catalog leaf per
+        scenario, with a capacity-crunch episode scheduled on every leaf
+        whose zone is in ``crunch_zones`` (capacity pressure is zonal —
+        the untouched zones are what cost-aware substitution flees to)."""
+        procs = []
+        for sc in scenarios:
+            kw = dict(proc_overrides)
+            if sc.zone in crunch_zones:
+                kw.update(crunch_t0=crunch_window[0],
+                          crunch_t1=crunch_window[1],
+                          crunch_amp=crunch_amp, crunch_A=crunch_A,
+                          crunch_tau1=crunch_tau1)
+            procs.append(spot_price_process(sc.zone, sc.vm_type, **kw))
+        return cls(processes=procs, horizon=horizon, dt=dt, seed=seed)
+
+    def __len__(self) -> int:
+        return len(self.processes)
+
+    def grid(self) -> PriceGrid:
+        if self._grid is None:
+            rows = np.stack([
+                price_trace(p, horizon=self.horizon, dt=self.dt,
+                            seed=self.seed, leaf=i)
+                for i, p in enumerate(self.processes)])
+            self._grid = PriceGrid.from_prices(rows, self.dt)
+        return self._grid
+
+    def launch_time(self, regime: str) -> float:
+        """The wall-clock launch hour a regime evaluates at: ``"calm"``
+        launches at hour 0 (no default window covers it); ``"crunch"`` at
+        the first scheduled episode's start — if no leaf schedules one,
+        crunch degenerates to calm."""
+        if regime == "calm":
+            return 0.0
+        if regime == "crunch":
+            starts = [float(np.float64(p.crunch_t0)) for p in self.processes
+                      if float(np.float64(p.crunch_t1))
+                      > float(np.float64(p.crunch_t0))]
+            return min(starts) if starts else 0.0
+        raise ValueError(f"regime must be 'calm' or 'crunch', got {regime!r}")
+
+    def crunch_dists(self, scenarios: Sequence, t_launch: float) -> list:
+        """Per-leaf crunch-coupled Eq. 1 models at launch time (the
+        :func:`crunch_effective` coupling, one per scenario)."""
+        return [crunch_effective(sc.dist(), p, t_launch)
+                for sc, p in zip(scenarios, self.processes)]
+
+
+class PriceFeed:
+    """The closed-loop runtime's live ticker: one :class:`PriceProcess`
+    advanced ``tick_hours`` per observation, extending its trace lazily in
+    ``block`` cells — deterministic per seed, so a replayed run bills
+    identically.  ``FleetRuntime`` calls :meth:`advance` once per streamed
+    lifetime and bills the observation at the returned launch price."""
+
+    def __init__(self, process: Optional[PriceProcess] = None, *,
+                 seed: int = 0, dt: float = DEFAULT_PRICE_DT,
+                 tick_hours: float = 0.05, block: int = 512):
+        self.process = process or spot_price_process()
+        self.seed = int(seed)
+        self.dt = float(dt)
+        self.tick_hours = float(tick_hours)
+        self.block = int(block)
+        self.clock_hours = 0.0
+        self._trace = np.empty((0,), np.float64)
+
+    def _ensure(self, k: int) -> None:
+        while k >= len(self._trace):
+            cells = len(self._trace) + self.block
+            # regenerate the whole prefix: price_trace is deterministic per
+            # (seed, leaf), so extending never rewrites history
+            self._trace = price_trace(self.process,
+                                      horizon=cells * self.dt, dt=self.dt,
+                                      seed=self.seed, leaf=0)
+
+    def price_at(self, hours: float) -> float:
+        k = max(int(np.floor(float(hours) / self.dt)), 0)
+        self._ensure(k)
+        return float(self._trace[k])
+
+    def current(self) -> float:
+        return self.price_at(self.clock_hours)
+
+    def advance(self) -> float:
+        """Price at the current clock, then tick forward one observation."""
+        p = self.current()
+        self.clock_hours += self.tick_hours
+        return p

@@ -161,6 +161,11 @@ class RuntimeReport:
     adaptation_lag_obs: Optional[int]   # first injected drift -> its swap
     regret_hours: Optional[float]       # stale-K minus fresh-K mean makespan
     regret_frac: Optional[float]
+    # market billing (populated when the runtime has a price_feed): every
+    # streamed lifetime is billed at its launch price off the live ticker
+    vm_hours_streamed: float = 0.0
+    dollars_streamed: float = 0.0
+    mean_price: Optional[float] = None  # dollars / vm-hours
 
 
 class FleetRuntime:
@@ -170,9 +175,16 @@ class FleetRuntime:
     (this is what "the fleet keeps serving" means operationally)."""
 
     def __init__(self, config: Optional[RuntimeConfig] = None, *,
-                 injector=None, stream: Optional[FleetStream] = None):
+                 injector=None, stream: Optional[FleetStream] = None,
+                 price_feed=None):
         self.cfg = cfg = config or RuntimeConfig()
         self.injector = injector
+        # live market ticker (a market.PriceFeed): each streamed lifetime
+        # is billed at the price the feed shows when the VM launches —
+        # the same launch-cell convention as the service billing
+        self.price_feed = price_feed
+        self.vm_hours_streamed = 0.0
+        self.dollars_streamed = 0.0
         self.stream = stream or FleetStream(seed=cfg.stream_seed,
                                             block=cfg.stream_block,
                                             vm_types=cfg.stream_vm_types)
@@ -362,6 +374,11 @@ class FleetRuntime:
             storm = inj.storm_active(self.obs)
         life = (inj.storm_lifetime(storm) if storm is not None
                 else self.stream.next())
+        if self.price_feed is not None:
+            # bill the observed VM life at its launch price, then tick the
+            # market clock — deterministic per feed seed, so replays match
+            self.vm_hours_streamed += life
+            self.dollars_streamed += life * self.price_feed.advance()
         # fit stage (tracker validates the refit; failures keep last-good)
         try:
             refit = self.tracker.observe(life)
@@ -445,7 +462,11 @@ class FleetRuntime:
             adaptation_lag_obs=(self._adaptation_lags[0]
                                 if self._adaptation_lags else None),
             regret_hours=None if regret is None else regret[0],
-            regret_frac=None if regret is None else regret[1])
+            regret_frac=None if regret is None else regret[1],
+            vm_hours_streamed=self.vm_hours_streamed,
+            dollars_streamed=self.dollars_streamed,
+            mean_price=(self.dollars_streamed / self.vm_hours_streamed
+                        if self.vm_hours_streamed > 0 else None))
 
     def evaluate(self, **kw) -> list:
         """Re-run the standing policy sweep from the CURRENT live tables —

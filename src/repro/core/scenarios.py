@@ -66,7 +66,8 @@ from .policies import young_daly as yd
 
 __all__ = [
     "Scenario", "register", "get", "names", "default_grid",
-    "sweep_checkpointing", "sweep_service", "PHASE_CLOCKS", "ZONE_PARAMS",
+    "sweep_checkpointing", "sweep_service", "sweep_market",
+    "solve_market_tables", "PHASE_CLOCKS", "ZONE_PARAMS",
 ]
 
 # Wall-clock launch hour per diurnal phase label.  "day" is the busiest
@@ -503,4 +504,230 @@ def sweep_service(scenarios: Iterable, *,
             reuse_table=tables.view(si) if tables is not None else None,
             **kw)
         rows.extend(_row(sc, cell) for cell in grid)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# spot-market sweep (dollar-denominated policy evaluation)
+# ---------------------------------------------------------------------------
+
+_MARKET_POLICIES = ("fixed", "cheapest", "migrate")
+
+
+def solve_market_tables(scenarios: Iterable, market, *,
+                        regimes: Sequence[str] = ("calm", "crunch"),
+                        job_steps: int = 300, grid_dt: float = 1.0 / 60.0,
+                        delta_steps: int = 1, n_sweeps: int = 3,
+                        restart_overhead: float = 0.0,
+                        solver_backend: str = "auto",
+                        solver_refine: bool = False) -> dict:
+    """Solve one ``BatchDPTables`` per market regime, for ``tables=`` reuse.
+
+    Each regime's tables are solved against the CRUNCH-COUPLED Eq. 1 models
+    at that regime's launch time (``market.crunch_dists``): calm tables
+    equal the plain per-scenario tables (zero crunch intensity passes the
+    base fit through unchanged), crunch tables price in the boosted early
+    hazard.  Feed the result to :func:`sweep_market` ``tables=`` to
+    re-evaluate fresh seeds/trial counts/policies without re-solving — the
+    same whole-grid reuse contract as ``sweep_checkpointing``.
+    """
+    scs = _resolve(scenarios)
+    out = {}
+    for regime in regimes:
+        dist_list = market.crunch_dists(scs, market.launch_time(regime))
+        out[regime] = ckpt.solve_batch(
+            dist_list, job_steps, grid_dt=grid_dt, delta_steps=delta_steps,
+            n_sweeps=n_sweeps, restart_overhead=restart_overhead,
+            backend=solver_backend, refine=solver_refine)
+    return out
+
+
+def _market_row(sc, regime, policy, seed, chosen, launch_price, dollars,
+                mk_row, fin_row, *, n_trials, job_steps, crunch):
+    ok = np.asarray(fin_row, bool)
+    d_ok = np.asarray(dollars)[ok]
+    m_ok = np.asarray(mk_row)[ok]
+    return dict(
+        sc.coords(), regime=regime, policy=policy, seed=seed,
+        chosen=chosen, launch_price=float(launch_price),
+        n_trials=n_trials, job_steps=job_steps, crunch=bool(crunch),
+        expected_dollars=float(d_ok.mean()) if d_ok.size else float("nan"),
+        dollars_p50=float(np.median(d_ok)) if d_ok.size else float("nan"),
+        makespan_mean=float(m_ok.mean()) if m_ok.size else float("nan"),
+        unfinished_frac=float(1.0 - ok.mean()))
+
+
+def sweep_market(scenarios: Iterable, *, market=None,
+                 regimes: Sequence[str] = ("calm", "crunch"),
+                 policies: Sequence[str] = _MARKET_POLICIES,
+                 seeds: Sequence[int] = (0,), job_steps: int = 300,
+                 n_trials: int = 400, grid_dt: float = 1.0 / 60.0,
+                 delta_steps: int = 1, max_restarts: int = 64,
+                 restart_overhead: float = 0.0, n_sweeps: int = 3,
+                 tables: Optional[dict] = None,
+                 feasible_slack: float = 1.25,
+                 migrate_threshold: float = 1.15,
+                 migrate_overhead_hours: float = 2.0 / 60.0,
+                 cost_path: str = "kernel",
+                 solver_backend: str = "auto",
+                 solver_refine: bool = False) -> list:
+    """Expand (scenario x regime x cost-policy x seed) in dollars.
+
+    The market layer on the checkpointing sweep: each regime launches the
+    whole scenario grid at ``market.launch_time(regime)`` against the
+    crunch-coupled Eq. 1 models (``market.crunch_dists``), runs ONE batched
+    executor dispatch per (regime, seed), and bills every trial's makespan
+    against the (launch-shifted) ``(S, T)`` price grid through
+    ``engine.accumulate_price_cost`` — one jit-cached gather for every
+    policy (``tests/test_market.py`` asserts zero retracing).
+
+    Cost policies are *selection* policies over the scenario leaves (the
+    checkpoint schedule is always the DP table):
+
+    * ``"fixed"`` — run and bill the scenario's own leaf (the repo's
+      pre-market behavior, now in moving dollars).
+    * ``"cheapest"`` — cheapest-feasible substitution at launch: run and
+      bill the same-vm_type leaf with the lowest launch price among those
+      whose DP expected makespan is within ``feasible_slack`` of the own
+      leaf's.  Falls back to the own leaf when nothing cheaper qualifies.
+    * ``"migrate"`` — migrate-on-price-signal: start on the own leaf; at
+      the first grid cell where the own price exceeds ``migrate_threshold``
+      times the substitute's, the remaining trace is billed at the
+      substitute's prices, and trials still running at the crossing pay
+      ``migrate_overhead_hours`` at the substitute's crossing-cell price.
+      No crossing (or no substitute) degrades to ``"fixed"``.
+
+    ``tables=`` takes the dict of per-regime ``BatchDPTables`` from
+    :func:`solve_market_tables`, skipping every DP solve.
+    ``cost_path="reference"`` bills through the serial
+    ``market.integrate_cost_ref`` loop instead of the batched gather — the
+    bit-exactness cross-check used by ``benchmarks/market_bench.py``.
+    """
+    from . import market as market_mod
+    scs = _resolve(scenarios)
+    S = len(scs)
+    if market is None:
+        market = market_mod.MarketModel.for_scenarios(scs)
+    if len(market) != S:
+        raise ValueError(f"market has {len(market)} leaves for {S} scenarios")
+    if cost_path not in ("kernel", "reference"):
+        raise ValueError(f"cost_path must be 'kernel' or 'reference', "
+                         f"got {cost_path!r}")
+    unknown = set(policies) - set(_MARKET_POLICIES)
+    if unknown:
+        raise ValueError(f"unknown market policies {sorted(unknown)}; "
+                         f"choose from {_MARKET_POLICIES}")
+
+    def bill(grid, mk, price_index):
+        if cost_path == "kernel":
+            return engine.accumulate_price_cost(grid, mk, price_index)
+        return np.array([
+            [market_mod.integrate_cost_ref(grid.prices[price_index[s]],
+                                           grid.cum[price_index[s]],
+                                           grid.dt, m)
+             for m in mk[s]] for s in range(S)])
+
+    grid0 = market.grid()
+    T = grid0.prices.shape[1]
+    rows = []
+    for regime in regimes:
+        t0 = market.launch_time(regime)
+        dist_list = market.crunch_dists(scs, t0)
+        if tables is not None:
+            if regime not in tables:
+                raise ValueError(f"tables= has no entry for regime "
+                                 f"{regime!r}")
+            batch = tables[regime]
+            if len(batch) != S or batch.K.shape[1] != job_steps + 1:
+                raise ValueError(
+                    f"tables[{regime!r}] has {len(batch)} scenarios x "
+                    f"j_max {batch.K.shape[1] - 1}; this sweep needs "
+                    f"{S} x {job_steps}")
+            if batch.delta_steps != delta_steps \
+                    or abs(batch.grid_dt - grid_dt) > 1e-12 \
+                    or batch.restart_overhead != restart_overhead:
+                raise ValueError("tables was solved for a different "
+                                 "(grid_dt, delta_steps, restart_overhead) "
+                                 "workload")
+        else:
+            batch = ckpt.solve_batch(
+                dist_list, job_steps, grid_dt=grid_dt,
+                delta_steps=delta_steps, n_sweeps=n_sweeps,
+                restart_overhead=restart_overhead, backend=solver_backend,
+                refine=solver_refine)
+        exp_mk = np.array([batch.expected_makespan(s, job_steps)
+                           for s in range(S)])
+        g = grid0.shift(t0)
+        launch_p = g.prices[:, 0]
+        crunch_on = [regime == "crunch"
+                     and float(np.float64(p.crunch_t1))
+                     > float(np.float64(p.crunch_t0))
+                     for p in market.processes]
+        # cheapest-feasible substitute per leaf, resolved at launch: same
+        # vm_type, DP expected makespan within the slack, lowest launch
+        # price (ties keep the own leaf — substitution must strictly win)
+        target = np.arange(S)
+        for s in range(S):
+            cands = [j for j in range(S)
+                     if scs[j].vm_type == scs[s].vm_type
+                     and exp_mk[j] <= feasible_slack * exp_mk[s]
+                     and launch_p[j] < launch_p[s]]
+            if cands:
+                target[s] = min(cands, key=lambda j: launch_p[j])
+        # migrate-on-price-signal: first cell where own price exceeds
+        # threshold x substitute price; compose the billed row from the
+        # own prefix and the substitute suffix
+        composed = g.prices.copy()
+        kc = np.full(S, T, np.int64)
+        for s in range(S):
+            j = target[s]
+            if j == s:
+                continue
+            hit = np.flatnonzero(g.prices[s]
+                                 > migrate_threshold * g.prices[j])
+            if hit.size:
+                kc[s] = hit[0]
+                composed[s, hit[0]:] = g.prices[j, hit[0]:]
+        g_migrate = market_mod.PriceGrid.from_prices(composed, g.dt)
+
+        ptab = np.asarray(batch.K, np.int32)
+        idx = np.arange(S, dtype=np.int32)
+        for seed in seeds:
+            first, pool = engine.draw_lifetime_pool_batch(
+                dist_list, n_trials, max_restarts=max_restarts, seed=seed)
+            mk, fin = engine.simulate_makespan_batch(
+                ptab, job_steps, first=first, pool=pool, grid_dt=grid_dt,
+                delta_steps=delta_steps, restart_overhead=restart_overhead,
+                max_restarts=max_restarts, unfinished="nan",
+                return_finished=True)
+            mk = np.asarray(mk)
+            fin = np.asarray(fin)
+            for policy in policies:
+                if policy == "fixed":
+                    chosen, m_bill, f_bill = idx, mk, fin
+                    dollars = bill(g, m_bill, idx)
+                elif policy == "cheapest":
+                    chosen = target.astype(np.int32)
+                    m_bill, f_bill = mk[chosen], fin[chosen]
+                    dollars = bill(g, m_bill, chosen)
+                else:   # migrate
+                    chosen, m_bill, f_bill = idx, mk, fin
+                    dollars = bill(g_migrate, m_bill, idx)
+                    # trials still running at the crossing pay the
+                    # migration overhead at the substitute's price there
+                    cross_t = kc[:, None] * g.dt
+                    sur = np.where(
+                        m_bill > cross_t,
+                        migrate_overhead_hours
+                        * g.prices[target, np.minimum(kc, T - 1)][:, None],
+                        0.0)
+                    dollars = dollars + sur
+                for s in range(S):
+                    rows.append(_market_row(
+                        scs[s], regime, policy, seed,
+                        scs[int(chosen[s]) if policy != "migrate"
+                            else int(target[s])].name,
+                        launch_p[s], dollars[s], m_bill[s], f_bill[s],
+                        n_trials=n_trials, job_steps=job_steps,
+                        crunch=crunch_on[s]))
     return rows

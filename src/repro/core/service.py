@@ -120,6 +120,8 @@ class ServiceResult:
     jobs: list = dataclasses.field(default_factory=list)
     n_deflations: int = 0       # preemptions absorbed as capacity degradation
     n_rejected: int = 0         # jobs denied admission (deadline misses)
+    dollars: float = 0.0        # market-priced cost (== ``cost`` when the
+    #                             service was run without a price trace)
 
     @property
     def cost_reduction(self) -> float:
@@ -141,7 +143,9 @@ class BatchService:
                  reuse_table: Optional[engine.ReuseTable] = None,
                  vectorized_reuse: bool = True,
                  lifetime_pool: Optional[np.ndarray] = None,
-                 pool_size: int = 4096):
+                 pool_size: int = 4096,
+                 price_trace: Optional[np.ndarray] = None,
+                 price_dt: float = 1.0):
         self.dist = dist
         self.vm_type = vm_type
         self.cluster_size = cluster_size
@@ -165,6 +169,25 @@ class BatchService:
         self.pool_size = int(pool_size)
         if self.pool_size < 1:
             raise ValueError("pool_size must be >= 1")
+        # market billing: each VM is billed for ALL its vm-hours at the spot
+        # price in force at its launch cell, ``price_trace[floor(launched /
+        # price_dt)]`` (tail-clamped) — the spot convention of locking the
+        # bid price at acquisition.  The accumulation sites mirror the four
+        # ``vm_hours`` increments one-for-one, which is what lets
+        # ``service_kernel`` reproduce ``dollars`` bit-for-bit under x64 on
+        # shared pools (the PR-7 equivalence contract extended to dollars).
+        if price_trace is not None:
+            self._price_row = np.asarray(price_trace, np.float64)
+            if self._price_row.ndim != 1 or self._price_row.size == 0:
+                raise ValueError("price_trace must be a 1-D row of prices")
+            if not np.all(self._price_row > 0):
+                raise ValueError("price_trace must be strictly positive")
+            self.price_dt = float(price_dt)
+            if not self.price_dt > 0:
+                raise ValueError("price_dt must be > 0")
+        else:
+            self._price_row = None
+            self.price_dt = float(price_dt)
         if lifetime_pool is not None:
             self._pool = np.asarray(lifetime_pool, np.float64)
             self._pool_pos = 0
@@ -237,9 +260,24 @@ class BatchService:
         seq = 0
         now = 0.0
         vm_hours = 0.0
+        dollars = 0.0
         n_preempt = 0
         n_fail = 0
         next_vm_id = 0
+
+        def launch_price(vm: VM) -> float:
+            # the VM's locked-in spot price: its launch cell on the trace
+            row = self._price_row
+            k = min(int(vm.launched / self.price_dt), len(row) - 1)
+            return float(row[max(k, 0)])
+
+        def bill(vm: VM, inc: float) -> float:
+            """Dollar increment for ``inc`` vm-hours on ``vm`` — one product
+            per vm_hours increment, in the same order, so the batched kernel
+            can reproduce the accumulation bit-for-bit."""
+            if self._price_row is None:
+                return 0.0
+            return inc * launch_price(vm)
 
         def launch_vm(t):
             nonlocal next_vm_id, seq
@@ -277,7 +315,7 @@ class BatchService:
 
         def assign(t):
             """Greedy scheduling loop at time t."""
-            nonlocal seq, vm_hours
+            nonlocal seq, vm_hours, dollars
             if not queue:
                 # bag-of-jobs abstraction: the controller knows no further
                 # work is coming, so idle spares are released immediately
@@ -285,6 +323,7 @@ class BatchService:
                     if vm.job is None and vm.terminated is None:
                         vm.terminated = t
                         vm_hours += t - vm.launched
+                        dollars += bill(vm, t - vm.launched)
                 return
             while queue:
                 job = jobs[queue[0]]
@@ -334,6 +373,7 @@ class BatchService:
             elif kind == "preempt":
                 vm.terminated = now
                 vm_hours += min(now - vm.launched, vm.lifetime)
+                dollars += bill(vm, min(now - vm.launched, vm.lifetime))
                 if vm.job is not None:
                     job = jobs[vm.job]
                     if job.finished is None:
@@ -358,6 +398,7 @@ class BatchService:
                         now - vm.idle_since >= HOT_SPARE_HOURS - 1e-9:
                     vm.terminated = now
                     vm_hours += now - vm.launched
+                    dollars += bill(vm, now - vm.launched)
                     # the expired spare freed cluster capacity: jobs whose
                     # reuse was denied while the cluster was full can now
                     # get a fresh VM (otherwise they starve once the event
@@ -370,17 +411,21 @@ class BatchService:
         for vm in vms.values():
             if vm.terminated is None:
                 vm_hours += now - vm.launched
+                dollars += bill(vm, now - vm.launched)
         makespan = max((j.finished or now) for j in jobs)
         price = PRICES_PREEMPTIBLE[self.vm_type]
         od_price = PRICES_ON_DEMAND[self.vm_type]
         # on-demand reference: same bag, no preemptions, perfect packing
         total_work = float(np.sum([j.length for j in jobs]))
         on_demand_cost = total_work * od_price
+        cost = vm_hours * price
         return ServiceResult(makespan=makespan, vm_hours=vm_hours,
-                             cost=vm_hours * price,
+                             cost=cost,
                              on_demand_cost=on_demand_cost,
                              n_preemptions=n_preempt, n_job_failures=n_fail,
-                             jobs=jobs)
+                             jobs=jobs,
+                             dollars=dollars if self._price_row is not None
+                             else cost)
 
 
 def _bag_lengths(n_jobs: int, job_hours: float, jitter: float, seed: int):

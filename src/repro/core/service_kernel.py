@@ -160,7 +160,8 @@ def _init_state(B, J, V):
         n_launch=sc(0, it), n_active=sc(0, it), n_done=sc(0, it),
         n_preempt=sc(0, it), n_fail=sc(0, it), n_defl=sc(0, it),
         n_rej=sc(0, it), n_events=sc(0, it), steps=sc(0, it),
-        vm_hours=sc(0.0, ft), pending=sc(True, bool), halt=sc(False, bool),
+        vm_hours=sc(0.0, ft), dollars=sc(0.0, ft),
+        pending=sc(True, bool), halt=sc(False, bool),
         exhausted=sc(False, bool), rel_mode=sc(False, bool),
         stack=jnp.zeros((B, V), it), stack_len=sc(0, it),
         next_fresh=sc(0, it),
@@ -198,6 +199,7 @@ def _lane_step(lane, shared, s, *, n_slots: int):
     bidx, pidx, tidx = lane["bag_index"], lane["pool_index"], lane["table_index"]
     policy, cluster = lane["policy"], lane["cluster_size"]
     deflate_on, dfac = lane["deflate"], lane["deflate_factor"]
+    price_row, price_dt = lane["price"], shared["price_dt"]
 
     V = n_slots
     J = lengths_all.shape[1]
@@ -208,6 +210,15 @@ def _lane_step(lane, shared, s, *, n_slots: int):
     inf = jnp.asarray(np.inf, ft)
     zero = jnp.asarray(0.0, ft)
     slot_ids = jnp.arange(V, dtype=it)
+    Tp = price_row.shape[0]
+
+    def launch_price(launched):
+        # the VM's locked-in spot price: its launch cell on the lane's
+        # price row — the exact index arithmetic of the serial
+        # ``BatchService.run``'s ``launch_price`` (floor == int-trunc for
+        # launched >= 0, tail-clamped)
+        k = jnp.clip(jnp.floor(launched / price_dt).astype(it), 0, Tp - 1)
+        return price_row[k]
 
     # Each step function returns (scalar updates, per-array scatter deltas)
     # instead of a full next-state: every (V,)/(J,) array changes in at most
@@ -292,6 +303,12 @@ def _lane_step(lane, shared, s, *, n_slots: int):
             n_defl=s["n_defl"], rel_mode=s["rel_mode"],
             vm_hours=s["vm_hours"] + jnp.where(
                 b_release, now - s["launched"][rel], zero),
+            # dollars mirrors every vm_hours increment: the same wall-clock
+            # delta times the slot's launch-cell price (serial ``bill``)
+            dollars=s["dollars"] + jnp.where(
+                b_release,
+                (now - s["launched"][rel]) * launch_price(s["launched"][rel]),
+                zero),
             pending=~(b_stop | b_block),
             stack_len=s["stack_len"] - pop_stack.astype(it),
             next_fresh=s["next_fresh"] + (pop & ~pop_stack).astype(it),
@@ -380,6 +397,15 @@ def _lane_step(lane, shared, s, *, n_slots: int):
             seq=s["seq"] + (k_fin | defl_now).astype(it),
             vm_hours=(s["vm_hours"] + jnp.where(kill, dvh_kill, zero)
                       + jnp.where(k_exp, dvh_exp, zero)),
+            # kill and expire are mutually exclusive, so exactly one product
+            # is billed (the other add is +0.0, exact on non-negative sums)
+            dollars=(s["dollars"]
+                     + jnp.where(kill,
+                                 dvh_kill * launch_price(s["launched"][v]),
+                                 zero)
+                     + jnp.where(k_exp,
+                                 dvh_exp * launch_price(s["launched"][v]),
+                                 zero)),
             n_active=s["n_active"] - (kill | k_exp).astype(it),
             n_preempt=s["n_preempt"] + job_running.astype(it),
             n_fail=s["n_fail"] + job_running.astype(it),
@@ -446,27 +472,35 @@ def _lane_step(lane, shared, s, *, n_slots: int):
     return out
 
 
-def _epilogue(s, max_steps):
+def _epilogue(s, price_row, price_dt, max_steps):
     """Per-lane exit accounting (vmapped over the final carry)."""
     ft = jnp.result_type(float)
     zero = jnp.asarray(0.0, ft)
     BIGI = jnp.asarray(_BIG, jnp.int32)
     V = s["alive"].shape[0]
     J = s["fin_t"].shape[0]
+    Tp = price_row.shape[0]
     # bill still-running VMs in launch (vm_id) order so the sequential
     # float accumulation matches the serial epilogue exactly
     order = jnp.argsort(jnp.where(s["alive"], s["ordv"], BIGI))
 
-    def acc(i, h):
+    def acc(i, hd):
+        h, d = hd
         v = order[i]
-        return h + jnp.where(s["alive"][v], s["now"] - s["launched"][v],
-                             zero)
+        alive = s["alive"][v]
+        inc = s["now"] - s["launched"][v]
+        k = jnp.clip(jnp.floor(s["launched"][v] / price_dt).astype(jnp.int32),
+                     0, Tp - 1)
+        return (h + jnp.where(alive, inc, zero),
+                d + jnp.where(alive, inc * price_row[k], zero))
 
-    vm_hours = jax.lax.fori_loop(0, V, acc, s["vm_hours"])
+    vm_hours, dollars = jax.lax.fori_loop(0, V, acc,
+                                          (s["vm_hours"], s["dollars"]))
     makespan = jnp.max(jnp.where(jnp.isnan(s["fin_t"]), s["now"],
                                  s["fin_t"]))
     return dict(
-        makespan=makespan, vm_hours=vm_hours, final_time=s["now"],
+        makespan=makespan, vm_hours=vm_hours, dollars=dollars,
+        final_time=s["now"],
         n_preemptions=s["n_preempt"], n_job_failures=s["n_fail"],
         n_deflations=s["n_defl"], n_rejected=s["n_rej"],
         n_launches=s["n_launch"], n_events=s["n_events"],
@@ -502,7 +536,9 @@ def _service_kernel(lane, shared, n_slots):
                        & (s["steps"] < max_steps))
 
     out = jax.lax.while_loop(cond, body, _init_state(B, J, n_slots))
-    return jax.vmap(functools.partial(_epilogue, max_steps=max_steps))(out)
+    ep = functools.partial(_epilogue, max_steps=max_steps)
+    return jax.vmap(ep, in_axes=(0, 0, None))(out, lane["price"],
+                                              shared["price_dt"])
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +550,8 @@ class ServiceBatchResult:
     """Per-lane outputs of one batched service dispatch (numpy, host-side)."""
     makespan: np.ndarray          # (B,)
     vm_hours: np.ndarray          # (B,)
+    dollars: np.ndarray           # (B,) market-priced cost (== vm_hours when
+    #                               run without price_rows: unit price rows)
     final_time: np.ndarray        # (B,) last processed event time
     n_preemptions: np.ndarray     # (B,)
     n_job_failures: np.ndarray    # (B,)
@@ -530,6 +568,7 @@ class ServiceBatchResult:
     attempts: np.ndarray          # (B, J)
     done_work: np.ndarray         # (B, J)
     rejected: np.ndarray          # (B, J) bool
+    priced: bool = False          # True when real price_rows were supplied
 
     def __len__(self) -> int:
         return len(self.makespan)
@@ -544,6 +583,7 @@ def simulate_service_batch(
         relaunch_overhead: float = RELAUNCH_OVERHEAD,
         hot_spare_hours: float = HOT_SPARE_HOURS,
         max_slots: Optional[int] = None, max_steps: Optional[int] = None,
+        price_rows=None, price_dt: float = 1.0,
         on_exhausted: str = "raise") -> ServiceBatchResult:
     """Run B service lanes event-synchronously in ONE jitted dispatch.
 
@@ -558,6 +598,13 @@ def simulate_service_batch(
     ``deadlines`` an optional ``(R, J)`` per-job completion deadline (jobs
     whose estimated completion misses it are rejected at scheduling time);
     ``deflate``/``deflate_factor`` enable the per-lane VM-deflation branch.
+    ``price_rows`` is an optional ``(B, Tp)`` (or broadcastable ``(Tp,)``)
+    per-lane spot-price trace sampled every ``price_dt`` hours: each VM is
+    billed for ALL its vm-hours at its launch-cell price (the serial
+    ``BatchService(price_trace=...)`` convention), accumulating a per-lane
+    ``dollars`` total bit-identical to the serial loop under x64 on shared
+    pools.  Without ``price_rows`` the kernel bills unit prices, so
+    ``dollars == vm_hours`` and ``priced`` is False.
     ``on_exhausted="raise"`` fails loudly when any lane consumes its whole
     lifetime pool or exceeds ``max_steps``; ``"flag"`` returns the per-lane
     flags instead.
@@ -608,6 +655,19 @@ def simulate_service_batch(
         raise ValueError("deflate_factor must be in (0, 1] on deflate lanes")
     if checkpointing and ckpt_interval <= 0:
         raise ValueError("ckpt_interval must be positive")
+    priced = price_rows is not None
+    if priced:
+        price_rows = np.atleast_2d(np.asarray(price_rows, np.float64))
+        if price_rows.shape[0] == 1:
+            price_rows = np.broadcast_to(price_rows, (B, price_rows.shape[1]))
+        if price_rows.shape[0] != B or price_rows.shape[1] == 0:
+            raise ValueError("price_rows must be (B, Tp) or (Tp,)")
+        if not np.all(price_rows > 0):
+            raise ValueError("price_rows must be strictly positive")
+        if not float(price_dt) > 0:
+            raise ValueError("price_dt must be > 0")
+    else:
+        price_rows = np.ones((B, 1), np.float64)
 
     V = int(max_slots) if max_slots is not None else int(cluster_size.max())
     if V < int(cluster_size.max()):
@@ -621,7 +681,8 @@ def simulate_service_batch(
         bag_index=jnp.asarray(bag_index), pool_index=jnp.asarray(pool_index),
         table_index=jnp.asarray(table_index), policy=jnp.asarray(policy),
         cluster_size=jnp.asarray(cluster_size), deflate=jnp.asarray(deflate),
-        deflate_factor=jnp.asarray(dfac, ft))
+        deflate_factor=jnp.asarray(dfac, ft),
+        price=jnp.asarray(price_rows, ft))
     shared = dict(
         lengths=jnp.asarray(lengths, ft), deadlines=jnp.asarray(deadlines, ft),
         pools=jnp.asarray(pools, ft), tables=jnp.asarray(tables),
@@ -632,11 +693,13 @@ def simulate_service_batch(
         ckpt_on=jnp.asarray(bool(checkpointing)),
         ckpt_interval=jnp.asarray(float(ckpt_interval), ft),
         ckpt_cost=jnp.asarray(float(ckpt_cost), ft),
+        price_dt=jnp.asarray(float(price_dt), ft),
         max_steps=jnp.asarray(int(max_steps), jnp.int32))
     out = {k: np.asarray(v) for k, v in
            _service_kernel(lane, shared, V).items()}
     res = ServiceBatchResult(
         makespan=out["makespan"], vm_hours=out["vm_hours"],
+        dollars=out["dollars"], priced=priced,
         final_time=out["final_time"], n_preemptions=out["n_preemptions"],
         n_job_failures=out["n_job_failures"], n_deflations=out["n_deflations"],
         n_rejected=out["n_rejected"], n_launches=out["n_launches"],
@@ -671,6 +734,7 @@ def run_cells_batched(*, cells: Sequence[dict], dists: Sequence,
                       checkpointing: bool = False, ckpt_interval: float = 0.5,
                       ckpt_cost: float = 1.0 / 60.0,
                       return_jobs: bool = False,
+                      price_rows=None, price_dt: float = 1.0,
                       on_exhausted: str = "raise") -> list:
     """Run a list of grid cells through ONE batched kernel dispatch.
 
@@ -717,6 +781,7 @@ def run_cells_batched(*, cells: Sequence[dict], dists: Sequence,
         deadlines=deadlines, deflate=[d for _, d in parsed],
         deflate_factor=deflate_factor, checkpointing=checkpointing,
         ckpt_interval=ckpt_interval, ckpt_cost=ckpt_cost,
+        price_rows=price_rows, price_dt=price_dt,
         on_exhausted=on_exhausted)
     rows = []
     for i, cell in enumerate(cells):
@@ -741,6 +806,11 @@ def lane_result(res: ServiceBatchResult, i: int, bag_lengths, vm_type: str,
     vm_hours = float(res.vm_hours[i])
     price = PRICES_PREEMPTIBLE[vm_type]
     od_price = PRICES_ON_DEMAND[vm_type]
+    cost = vm_hours * price
+    # market dollars: the kernel's accumulated launch-cell billing when a
+    # price trace was supplied, else the flat-price cost — the same
+    # fallback as the serial epilogue
+    dollars = float(res.dollars[i]) if res.priced else cost
     total_work = float(np.sum([float(l) for l in bag_lengths]))
     job_list = []
     if jobs:
@@ -753,8 +823,8 @@ def lane_result(res: ServiceBatchResult, i: int, bag_lengths, vm_type: str,
                 done_work=float(res.done_work[i, j])))
     return ServiceResult(
         makespan=float(res.makespan[i]), vm_hours=vm_hours,
-        cost=vm_hours * price, on_demand_cost=total_work * od_price,
+        cost=cost, on_demand_cost=total_work * od_price,
         n_preemptions=int(res.n_preemptions[i]),
         n_job_failures=int(res.n_job_failures[i]), jobs=job_list,
         n_deflations=int(res.n_deflations[i]),
-        n_rejected=int(res.n_rejected[i]))
+        n_rejected=int(res.n_rejected[i]), dollars=dollars)

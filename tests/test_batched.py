@@ -317,6 +317,55 @@ def test_batched_executor_finished_mask_and_errors():
 
 
 # ---------------------------------------------------------------------------
+# market dollars through the batched executor
+# ---------------------------------------------------------------------------
+
+def test_executor_dollar_rows_bitexact_x64(grid_dists):
+    """simulate_makespan_batch(price=...) bills every lane's makespans
+    bit-identically to the serial market.integrate_cost_ref loop on a
+    shared x64 pool — NaN-flagged unfinished trials cost NaN in both
+    paths, and price_index dedup cannot change any lane's dollars."""
+    from repro.core import market as M
+    ds = grid_dists[:3]
+    job = 60
+    batch = C.solve_batch(ds, job, grid_dt=GRID)
+    tables3 = np.asarray(batch.K, np.int32)
+    # max_restarts=2 leaves some trials unfinished => NaN dollars covered
+    first_b, pool_b = E.draw_lifetime_pool_batch(ds, 80, max_restarts=2,
+                                                 seed=5)
+    grid = M.MarketModel(
+        processes=[M.spot_price_process(z) for z in M.MARKET_ZONE_PARAMS],
+        horizon=12.0, seed=3).grid()
+    with enable_x64():
+        mk, fin, dollars = E.simulate_makespan_batch(
+            tables3, job, first=first_b, pool=pool_b, grid_dt=GRID,
+            max_restarts=2, return_finished=True, price=grid)
+        mk_plain = E.simulate_makespan_batch(
+            tables3, job, first=first_b, pool=pool_b, grid_dt=GRID,
+            max_restarts=2)
+        _, d_indexed = E.simulate_makespan_batch(
+            tables3, job, first=first_b, pool=pool_b, grid_dt=GRID,
+            max_restarts=2, price=grid,
+            price_index=np.arange(3, dtype=np.int32))
+    assert not fin.all(), "workload failed to produce unfinished trials"
+    np.testing.assert_array_equal(mk, mk_plain)   # billing changes nothing
+    np.testing.assert_array_equal(dollars, d_indexed)
+    assert dollars.shape == mk.shape
+    for s in range(len(ds)):
+        for j in range(mk.shape[1]):
+            ref = M.integrate_cost_ref(grid.prices[s], grid.cum[s],
+                                       grid.dt, mk[s, j])
+            if np.isnan(ref):
+                assert np.isnan(dollars[s, j]), (s, j)
+            else:
+                assert dollars[s, j] == ref, (s, j)
+    with pytest.raises(ValueError, match="price_index needs price"):
+        E.simulate_makespan_batch(tables3, job, first=first_b, pool=pool_b,
+                                  grid_dt=GRID, max_restarts=2,
+                                  price_index=np.arange(3, dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
 # batched ReuseTable
 # ---------------------------------------------------------------------------
 

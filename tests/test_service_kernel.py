@@ -282,6 +282,66 @@ def test_one_pool_dispatch_per_grid(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# market dollars: launch-price billing (PR-8)
+# ---------------------------------------------------------------------------
+
+def test_service_dollars_bit_identical_to_serial_x64():
+    """On shared per-seed pools and per-cell price rows, the kernel's
+    launch-price dollar accounting equals the serial BatchService's
+    bit-for-bit under x64 — the PR-7 equivalence contract extended to
+    dollars, for the model and memoryless policies alike.  Unpriced cells
+    fall back to dollars == the flat-rate cost in both paths."""
+    from repro.core import market as M
+    dist = _dist()
+    seeds = (0, 1)
+    bags = {s: S._bag_lengths(6, 2.0, 0.1, s) for s in seeds}
+    values = S.grid_reuse_values(dist, seeds=seeds, n_jobs=6, job_hours=2.0,
+                                 jitter=0.1, vm_type="n1-highcpu-32")
+    tables = E.ReuseTables([dist], values)
+    cells = [dict(dist_index=0, vm_type="n1-highcpu-32", policy=pol,
+                  cluster_size=cs, seed=sd)
+             for pol in ("memoryless", "model")
+             for cs in (2, 3) for sd in seeds]
+    price_dt = 0.25
+    rows_p = np.stack([M.price_trace(M.spot_price_process(), horizon=48.0,
+                                     dt=price_dt, seed=7, leaf=i)
+                       for i in range(len(cells))])
+    with enable_x64():
+        rows_b = K.run_cells_batched(
+            cells=cells, dists=[dist], lengths_by_seed=bags,
+            reuse_tables=tables, pool_size=512,
+            price_rows=rows_p, price_dt=price_dt)
+        for i, (cell, row) in enumerate(zip(cells, rows_b)):
+            pool = S.draw_service_pool(dist, seed=cell["seed"], size=512)
+            ref = S.BatchService(
+                dist, cluster_size=cell["cluster_size"],
+                policy=cell["policy"], seed=cell["seed"], pool_size=512,
+                reuse_table=tables.view(0), lifetime_pool=pool,
+                price_trace=rows_p[i], price_dt=price_dt,
+            ).run(bags[cell["seed"]])
+            assert row["result"].dollars == ref.dollars, cell
+            assert row["result"].vm_hours == ref.vm_hours, cell
+            assert ref.dollars > 0.0
+        # unpriced cells: dollars degrades to the flat-rate cost
+        rows_u = K.run_cells_batched(cells=cells[:2], dists=[dist],
+                                     lengths_by_seed=bags,
+                                     reuse_tables=tables, pool_size=512)
+    for row in rows_u:
+        assert row["result"].dollars == row["result"].cost
+
+
+def test_service_price_rows_validation():
+    base = dict(lengths=[[1.0]], pools=[[5.0] * 4], bag_index=[0],
+                pool_index=[0], policy=["memoryless"], cluster_size=[1])
+    with pytest.raises(ValueError, match="strictly positive"):
+        K.simulate_service_batch(price_rows=[[1.0, 0.0]], **base)
+    with pytest.raises(ValueError, match="price_dt"):
+        K.simulate_service_batch(price_rows=[[1.0]], price_dt=0.0, **base)
+    with pytest.raises(ValueError, match=r"price_rows must be \(B, Tp\)"):
+        K.simulate_service_batch(price_rows=np.ones((3, 4)), **base)
+
+
+# ---------------------------------------------------------------------------
 # guard rails
 # ---------------------------------------------------------------------------
 

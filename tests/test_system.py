@@ -30,6 +30,7 @@ def test_train_loss_decreases(tiny_cfg, tmp_path):
     assert res.checkpoints >= 1
 
 
+@pytest.mark.slow
 def test_train_survives_preemptions_and_resumes(tiny_cfg, tmp_path):
     """Preemption mid-run: emergency checkpoint + restore + replay; the
     trainer must still complete all steps."""
@@ -42,6 +43,7 @@ def test_train_survives_preemptions_and_resumes(tiny_cfg, tmp_path):
     assert res.steps_run >= 50
 
 
+@pytest.mark.slow
 def test_deterministic_replay_after_restart(tiny_cfg, tmp_path):
     """A run with preemptions must end at the same final params/loss as an
     uninterrupted run (checkpoint + pipeline replay = exactly-once)."""
