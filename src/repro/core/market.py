@@ -357,6 +357,17 @@ class PriceFeed:
         self._ensure(k)
         return float(self._trace[k])
 
+    def grid(self, horizon_hours: float) -> PriceGrid:
+        """A one-row :class:`PriceGrid` of the next ``horizon_hours`` as
+        seen from the current clock — the forecast the dollar-objective DP
+        solves against (``FleetRuntime(dp_objective="dollars")`` refits on
+        it).  Deterministic per (seed, clock): the same clock always yields
+        the same grid, so refit tables are replayable."""
+        n = max(int(np.ceil(float(horizon_hours) / self.dt)), 1)
+        k0 = max(int(np.floor(self.clock_hours / self.dt)), 0)
+        self._ensure(k0 + n - 1)
+        return PriceGrid.from_prices(self._trace[k0:k0 + n][None, :], self.dt)
+
     def current(self) -> float:
         return self.price_at(self.clock_hours)
 

@@ -71,7 +71,11 @@ import numpy as np
 
 from . import solver_backends
 from .solver_backends import refine as _refine
-from .solver_backends.grids import _EPS, cdf_grids as _cdf_grids  # noqa: F401
+from .solver_backends.grids import (  # noqa: F401
+    _EPS, cdf_grids as _cdf_grids, dollar_loss_grids as _dollar_loss_grids,
+    price_cum_grids as _price_cum_grids)
+
+OBJECTIVES = ("makespan", "dollars")
 
 # retained names for the two kernels this module used to define inline; the
 # implementations moved to the backend package unchanged
@@ -81,14 +85,17 @@ _solve_tables_batch = solver_backends.xla.solve_tables_batch
 
 @dataclasses.dataclass(frozen=True)
 class DPTables:
-    """Solved DP: V[j, t] expected remaining makespan (hours), K[j, t] optimal
-    next-checkpoint interval (steps)."""
+    """Solved DP: V[j, t] expected remaining cost-to-completion, K[j, t]
+    optimal next-checkpoint interval (steps).  ``objective`` records the
+    unit of V: hours (``"makespan"``, the paper's Eqs. 11-15) or dollars
+    (``"dollars"``, price-weighted segments + launch-priced restarts)."""
     V: np.ndarray
     K: np.ndarray
     grid_dt: float
     delta_steps: int
     restart_overhead: float
     horizon_idx: int
+    objective: str = "makespan"
 
     def interval_steps(self, remaining_steps: int, age_idx: int) -> int:
         j = int(np.clip(remaining_steps, 0, self.K.shape[0] - 1))
@@ -96,6 +103,8 @@ class DPTables:
         return int(self.K[j, t])
 
     def expected_makespan(self, job_steps: int, age_idx: int = 0) -> float:
+        """V at (job_steps, age_idx) — expected hours under the makespan
+        objective, expected dollars under the dollar objective."""
         return float(self.V[int(job_steps), int(age_idx)])
 
 
@@ -115,6 +124,8 @@ class BatchDPTables:
     # tables and, for refine=True, what the refinement pipeline did
     backend: str = "xla"
     refine_info: Optional[dict] = None
+    # unit of V: "makespan" (hours, Eqs. 11-15) or "dollars"
+    objective: str = "makespan"
 
     def __len__(self) -> int:
         return self.V.shape[0]
@@ -123,10 +134,13 @@ class BatchDPTables:
         return DPTables(V=self.V[s], K=self.K[s], grid_dt=self.grid_dt,
                         delta_steps=self.delta_steps,
                         restart_overhead=self.restart_overhead,
-                        horizon_idx=self.horizon_idx)
+                        horizon_idx=self.horizon_idx,
+                        objective=self.objective)
 
     def expected_makespan(self, s: int, job_steps: int,
                           age_idx: int = 0) -> float:
+        """V at (s, job_steps, age_idx) — expected hours under the makespan
+        objective, expected dollars under the dollar objective."""
         return float(self.V[int(s), int(job_steps), int(age_idx)])
 
     def validate(self) -> "BatchDPTables":
@@ -136,12 +150,17 @@ class BatchDPTables:
         atomic table swap: a table passes only if every V entry is finite
         and non-negative and every K row respects the DP's own invariant
         (``0 <= K[j] <= j``, with ``K[j] >= 1`` whenever work remains).
+        The invariants are objective-independent (dollar V is a price
+        integral of non-negative work, so it is non-negative too); only the
+        unit named in the error message changes.
         Raises ``ValueError``; returns ``self`` so calls chain.
         """
+        unit = "dollars" if self.objective == "dollars" else "makespans"
         if not np.all(np.isfinite(self.V)):
-            raise ValueError("BatchDPTables.validate: non-finite V entries")
+            raise ValueError(
+                f"BatchDPTables.validate: non-finite V entries ({unit})")
         if np.any(self.V < 0.0):
-            raise ValueError("BatchDPTables.validate: negative makespans in V")
+            raise ValueError(f"BatchDPTables.validate: negative {unit} in V")
         j = np.arange(self.K.shape[1])[None, :, None]
         if np.any(self.K < 0) or np.any(self.K > j):
             raise ValueError("BatchDPTables.validate: K outside [0, j]")
@@ -151,9 +170,41 @@ class BatchDPTables:
         return self
 
 
+def _check_objective(objective: str, price) -> None:
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective={objective!r}; expected one of "
+                         f"{OBJECTIVES}")
+    if objective == "dollars" and price is None:
+        raise ValueError("objective='dollars' requires price= (a "
+                         "market.PriceGrid)")
+    if objective == "makespan" and price is not None:
+        raise ValueError("price= is only meaningful with objective='dollars'")
+
+
+def _dollar_inputs(price, grid_dt: float, t_max: int, job_steps: int,
+                   delta_steps: int, restart_overhead: float, S: int):
+    """Solver inputs for the dollar objective: the float32 cumulative-dollar
+    grid ``Pc`` (``(S, TX)``, extended past the horizon so segment gathers
+    never clip) and the per-scenario dollar restart overhead ``ro``
+    (``(S,)``, overhead hours billed at the launch-cell price).  A one-row
+    ``price`` broadcasts over the scenario axis."""
+    rows = np.asarray(price.prices).shape[0]
+    if rows not in (1, S):
+        raise ValueError(
+            f"price= has {rows} rows; expected 1 (broadcast) or S={S}")
+    Pc, P0 = _price_cum_grids(price.prices, price.cum, price.dt, grid_dt,
+                              t_max, int(job_steps) + int(delta_steps))
+    if rows == 1 and S > 1:
+        Pc = np.broadcast_to(Pc, (S,) + Pc.shape[1:])
+        P0 = np.broadcast_to(P0, (S,))
+    ro = (float(restart_overhead) * P0).astype(np.float32)
+    return jnp.asarray(Pc), jnp.asarray(ro)
+
+
 def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
           delta_steps: int = 1, n_sweeps: int = 3,
-          restart_overhead: float = 0.0, backend: str = "auto") -> DPTables:
+          restart_overhead: float = 0.0, backend: str = "auto",
+          objective: str = "makespan", price=None) -> DPTables:
     """Solve the checkpointing DP for jobs up to ``job_steps`` grid steps on
     VMs following ``dist`` (any repro.core.distributions family).
 
@@ -163,59 +214,100 @@ def solve(dist, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     ``tests/test_batched.py`` enforces (``REPRO_SOLVER_BACKEND`` therefore
     does not apply here).  An explicit ``"xla"``/``"pallas"`` routes through
     the batched machinery with ``S=1`` and unwraps.
+
+    ``objective="dollars"`` with a ``price`` grid solves for expected
+    dollars-to-completion instead of hours (row 0 of a multi-row grid);
+    see :func:`solve_batch` for the recurrence.
     """
+    _check_objective(objective, price)
     Fc, Hc, t_max = _cdf_grids(dist, grid_dt)
     # scalars pinned to the solver's native f32 (see _cdf_grids): keeps
     # solve/solve_batch bit-identical to each other at any session dtype
     gdt, ro = jnp.float32(grid_dt), jnp.float32(restart_overhead)
+    Pc = Elp = None
+    if objective == "dollars":
+        rows = int(np.asarray(price.prices).shape[0])
+        Pc, ro = _dollar_inputs(price, grid_dt, t_max, job_steps,
+                                delta_steps, restart_overhead, rows)
+        Pc, ro = Pc[:1], ro[:1]          # single scenario: row 0
+        Elp = jnp.asarray(_dollar_loss_grids(
+            Fc[None], Hc[None], Pc, grid_dt, j_max=int(job_steps),
+            t_max=t_max, delta_steps=int(delta_steps)))
     if backend in ("auto", "reference"):
-        V, K = _solve_tables(Fc, Hc, gdt, ro, j_max=int(job_steps),
-                             t_max=t_max, delta_steps=int(delta_steps),
-                             n_sweeps=n_sweeps)
+        pc0 = None if Pc is None else Pc[0]
+        ro0 = ro if Pc is None else ro[0]
+        ep0 = None if Elp is None else Elp[0]
+        V, K = _solve_tables(Fc, Hc, gdt, ro0, None, pc0, ep0,
+                             j_max=int(job_steps), t_max=t_max,
+                             delta_steps=int(delta_steps), n_sweeps=n_sweeps)
     else:
         name = solver_backends.resolve(backend)
-        V, K = _dispatch_plain(name, Fc[None], Hc[None], gdt, ro, None,
-                               j_max=int(job_steps), t_max=t_max,
+        V, K = _dispatch_plain(name, Fc[None], Hc[None], gdt, ro, None, Pc,
+                               Elp, j_max=int(job_steps), t_max=t_max,
                                delta_steps=int(delta_steps),
                                n_sweeps=n_sweeps)
         V, K = V[0], K[0]
     return DPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                     delta_steps=int(delta_steps),
-                    restart_overhead=restart_overhead, horizon_idx=t_max)
+                    restart_overhead=restart_overhead, horizon_idx=t_max,
+                    objective=objective)
 
 
-def _dispatch_plain(name: str, Fc, Hc, gdt, ro, v_init, *, j_max: int,
-                    t_max: int, delta_steps: int, n_sweeps: int):
+def _dispatch_plain(name: str, Fc, Hc, gdt, ro, v_init, Pc=None, Elp=None, *,
+                    j_max: int, t_max: int, delta_steps: int, n_sweeps: int):
     """Run one backend on stacked grids, sharding the scenario axis over an
     active ``repro.sharding`` mesh when its rules allow (transparent
     single-device fallback: the unwrapped call is byte-identical to the
-    pre-refactor one)."""
+    pre-refactor one).
+
+    In dollar mode (``Pc``/``Elp`` given) ``ro`` is the per-scenario ``(S,)``
+    dollar overhead and rides the sharded operand list with ``Pc`` and the
+    host-precomputed loss grids ``Elp`` — a closure capture would replicate
+    them at full length inside each shard."""
     mod = solver_backends.get(name)
     statics = dict(j_max=j_max, t_max=t_max, delta_steps=delta_steps,
                    n_sweeps=n_sweeps)
     if name == "reference":
         # the Python-loop batch adapter: per-scenario dispatches, no shard
-        return mod.solve_tables_batch(Fc, Hc, gdt, ro, v_init, **statics)
-    if v_init is None:
-        kern = lambda fc, hc: mod.solve_tables_batch(fc, hc, gdt, ro, None,
-                                                     **statics)
-        args = (Fc, Hc)
+        return mod.solve_tables_batch(Fc, Hc, gdt, ro, v_init, Pc, Elp,
+                                      **statics)
+    if Pc is None:
+        if v_init is None:
+            kern = lambda fc, hc: mod.solve_tables_batch(
+                fc, hc, gdt, ro, None, **statics)
+            args = (Fc, Hc)
+        else:
+            kern = lambda fc, hc, vi: mod.solve_tables_batch(
+                fc, hc, gdt, ro, vi, **statics)
+            args = (Fc, Hc, v_init)
     else:
-        kern = lambda fc, hc, vi: mod.solve_tables_batch(fc, hc, gdt, ro, vi,
-                                                         **statics)
-        args = (Fc, Hc, v_init)
+        if v_init is None:
+            kern = lambda fc, hc, pc, ep, rv: mod.solve_tables_batch(
+                fc, hc, gdt, rv, None, pc, ep, **statics)
+            args = (Fc, Hc, Pc, Elp, ro)
+        else:
+            kern = lambda fc, hc, vi, pc, ep, rv: mod.solve_tables_batch(
+                fc, hc, gdt, rv, vi, pc, ep, **statics)
+            args = (Fc, Hc, v_init, Pc, Elp, ro)
     fn, _ = solver_backends.shard_scenarios(kern, Fc.shape[0], len(args), 2)
     return fn(*args)
 
 
 def _dispatch_refined(dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
-                      refine_check: str, *, j_max: int, t_max: int,
-                      delta_steps: int, n_sweeps: int):
+                      refine_check: str, price=None, Pc=None, Elp=None, *,
+                      j_max: int, t_max: int, delta_steps: int,
+                      n_sweeps: int):
     """The coarse-to-fine pipeline (see ``solver_backends.refine``): coarse
     hint solve at ``factor x grid_dt``, a host round-trip turning its argmin
     table into static per-segment candidate caps, pruned pre-sweeps, one
     full-resolution sweep — falling back to the plain XLA solve whenever the
-    column-0 check (or the optional full check) fails."""
+    column-0 check (or the optional full check) fails.
+
+    Dollar mode (``Pc``/``price`` given): the coarse hint solve runs the
+    dollar objective too — a makespan hint would point at the wrong argmin
+    in priced windows — on a coarse cumulative-dollar grid built from the
+    same ``price``.  The dollar restart overhead ``ro`` is shared between
+    levels (same launch cell at either resolution)."""
     statics = dict(j_max=j_max, t_max=t_max, delta_steps=delta_steps,
                    n_sweeps=n_sweeps)
     factor, radius = rplan["factor"], rplan["radius"]
@@ -228,11 +320,24 @@ def _dispatch_refined(dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
     Fc_c, Hc_c = jnp.stack(Fcs_c), jnp.stack(Hcs_c)
     S = Fc.shape[0]
 
-    coarse = lambda fc, hc: (_refine.coarse_tables(
-        fc, hc, jnp.float32(grid_dt * factor), ro, j_max_c=j_max_c,
-        t_max_c=t_max_c, delta_steps_c=delta_c, n_sweeps=n_sweeps),)
-    fn_c, _ = solver_backends.shard_scenarios(coarse, S, 2, 1)
-    (Kc,) = fn_c(Fc_c, Hc_c)
+    if Pc is None:
+        coarse = lambda fc, hc: (_refine.coarse_tables(
+            fc, hc, jnp.float32(grid_dt * factor), ro, j_max_c=j_max_c,
+            t_max_c=t_max_c, delta_steps_c=delta_c, n_sweeps=n_sweeps),)
+        cargs = (Fc_c, Hc_c)
+    else:
+        Pc_c, _ = _dollar_inputs(price, grid_dt * factor, t_max_c, j_max_c,
+                                 delta_c, 0.0, S)
+        Elp_c = jnp.asarray(_dollar_loss_grids(
+            Fc_c, Hc_c, Pc_c, grid_dt * factor, j_max=j_max_c,
+            t_max=t_max_c, delta_steps=delta_c))
+        coarse = lambda fc, hc, pcc, epc, rv: (_refine.coarse_tables(
+            fc, hc, jnp.float32(grid_dt * factor), rv, j_max_c=j_max_c,
+            t_max_c=t_max_c, delta_steps_c=delta_c, n_sweeps=n_sweeps,
+            Pc_c=pcc, Elp_c=epc),)
+        cargs = (Fc_c, Hc_c, Pc_c, Elp_c, ro)
+    fn_c, _ = solver_backends.shard_scenarios(coarse, S, len(cargs), 1)
+    (Kc,) = fn_c(*cargs)
 
     # host round-trip: the coarse argmin becomes STATIC candidate caps (the
     # bit-safe prefix-slice form of "refine near the argmin"); retraces are
@@ -243,14 +348,25 @@ def _dispatch_refined(dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
                                   t_max_c=t_max_c)
 
     rstatics = dict(statics, caps=caps)
-    if v_init is None:
-        kern = lambda fc, hc: _refine.refined_solve(fc, hc, gdt, ro, None,
-                                                    **rstatics)
-        args = (Fc, Hc)
+    c0 = None if v_init is None else v_init[:, :, 0]
+    if Pc is None:
+        if c0 is None:
+            kern = lambda fc, hc: _refine.refined_solve(
+                fc, hc, gdt, ro, None, **rstatics)
+            args = (Fc, Hc)
+        else:
+            kern = lambda fc, hc, c0: _refine.refined_solve(
+                fc, hc, gdt, ro, c0, **rstatics)
+            args = (Fc, Hc, c0)
     else:
-        kern = lambda fc, hc, c0: _refine.refined_solve(
-            fc, hc, gdt, ro, c0, **rstatics)
-        args = (Fc, Hc, v_init[:, :, 0])
+        if c0 is None:
+            kern = lambda fc, hc, pc, ep, rv: _refine.refined_solve(
+                fc, hc, gdt, rv, None, pc, ep, **rstatics)
+            args = (Fc, Hc, Pc, Elp, ro)
+        else:
+            kern = lambda fc, hc, c0, pc, ep, rv: _refine.refined_solve(
+                fc, hc, gdt, rv, c0, pc, ep, **rstatics)
+            args = (Fc, Hc, c0, Pc, Elp, ro)
     fn, _ = solver_backends.shard_scenarios(kern, S, len(args), 3)
     V, K, ok = fn(*args)
 
@@ -259,13 +375,15 @@ def _dispatch_refined(dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
     if not info["verified_col0"]:
         # a cap cut off an argmin on the restart-cost chain: the refined
         # tables are not trustworthy — serve the plain solve instead
-        V, K = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, **statics)
+        V, K = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, Pc, Elp,
+                               **statics)
         info["fallback"] = True
         return V, K, info
     if refine_check == "full":
         # debug/CI harness: compare the whole refined table against the
         # plain solve (costs more than the solve it checks)
-        Vf, Kf = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, **statics)
+        Vf, Kf = _dispatch_plain("xla", Fc, Hc, gdt, ro, v_init, Pc, Elp,
+                                 **statics)
         match = bool(np.array_equal(np.asarray(V), np.asarray(Vf))
                      and np.array_equal(np.asarray(K), np.asarray(Kf)))
         info["full_check_match"] = match
@@ -280,7 +398,8 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
                 restart_overhead: float = 0.0, v_init=None,
                 backend: str = "auto", refine: bool = False,
                 refine_factor: int = 4, refine_radius: Optional[int] = None,
-                refine_check: str = "col0") -> BatchDPTables:
+                refine_check: str = "col0", objective: str = "makespan",
+                price=None) -> BatchDPTables:
     """Solve the checkpointing DP for a whole scenario batch in ONE compiled
     call (see ``solver_backends`` and ``docs/solver.md``).
 
@@ -306,8 +425,32 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     ``v_init`` optionally warm-starts the restart-cost fixed point from a
     previous solve's ``V`` array of matching shape ``(S, j_max+1, t_max+1)``
     (e.g. ``prev.V`` after a drift refit on the same grid) — the cold path
-    (``v_init=None``) is untouched and keeps the bit contract above.
+    (``v_init=None``) is untouched and keeps the bit contract above.  A warm
+    start must come from tables solved under the SAME objective (V's unit is
+    the seed's unit; the shapes cannot tell them apart, so this is the
+    caller's contract — ``FleetRuntime`` guards it).
+
+    ``objective="dollars"`` with ``price=`` (a ``market.PriceGrid``; one row
+    broadcasts, otherwise one row per scenario) switches V to expected
+    dollars-to-completion:
+
+        V[j, t] = min_i  P_succ * ( dP(t, w) + V[j-i, t+w] )
+                       + P_fail * ( E_lost * pbar(t, w) + R_j )
+
+    where ``dP(t, w) = Pc(t+w) - Pc(t)`` is the integrated price over the
+    segment's age window (``grids.price_cum_grids``, ages beyond the price
+    horizon billed at the final cell), ``pbar = dP / (w*dt)`` its average
+    $/hour, and ``R_j = restart_overhead x launch price + V[j, 0]``.  The
+    failure branches' probabilities and expected lost time are unchanged —
+    only the pricing of time changes — so K stretches checkpoint intervals
+    exactly where the price makes lost work cheap or checkpoint overhead
+    expensive.  On a flat grid at p $/h every cost term is p x the makespan
+    term, so V reduces to ``p x V_makespan`` (up to float32 rounding; the
+    property tests pin this).  All backends, warm starts, ``refine=True``
+    and scenario sharding work identically under either objective, and the
+    reference<->xla bit-identity contract covers both.
     """
+    _check_objective(objective, price)
     dists = list(dists)
     if not dists:
         raise ValueError("solve_batch() needs at least one distribution")
@@ -331,6 +474,13 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
     Hc = jnp.stack([g[1] for g in grids_fh])
     # f32-pinned scalars: see _cdf_grids — keeps V/K identical at any dtype
     gdt, ro = jnp.float32(grid_dt), jnp.float32(restart_overhead)
+    Pc = Elp = None
+    if objective == "dollars":
+        Pc, ro = _dollar_inputs(price, grid_dt, t_max, job_steps,
+                                delta_steps, restart_overhead, len(dists))
+        Elp = jnp.asarray(_dollar_loss_grids(
+            Fc, Hc, Pc, grid_dt, j_max=int(job_steps), t_max=t_max,
+            delta_steps=int(delta_steps)))
     statics = dict(j_max=int(job_steps), t_max=t_max,
                    delta_steps=int(delta_steps), n_sweeps=n_sweeps)
     refine_info = None
@@ -344,20 +494,22 @@ def solve_batch(dists: Sequence, job_steps: int, *, grid_dt: float = 1.0 / 60.0,
                              n_sweeps, refine_factor, refine_radius)
         if rplan is None:
             # grid too small to refine (or single sweep): plain solve
-            V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, **statics)
+            V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, Pc, Elp,
+                                   **statics)
             refine_info = {"applied": False, "reason": "degenerate"}
         else:
             V, K, refine_info = _dispatch_refined(
                 dists, Fc, Hc, grid_dt, gdt, ro, v_init, rplan,
-                refine_check, **statics)
+                refine_check, price, Pc, Elp, **statics)
     else:
         name = solver_backends.resolve(backend)
-        V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, **statics)
+        V, K = _dispatch_plain(name, Fc, Hc, gdt, ro, v_init, Pc, Elp,
+                               **statics)
     return BatchDPTables(V=np.asarray(V), K=np.asarray(K), grid_dt=grid_dt,
                          delta_steps=int(delta_steps),
                          restart_overhead=restart_overhead, horizon_idx=t_max,
                          backend=name + ("+refine" if refine else ""),
-                         refine_info=refine_info)
+                         refine_info=refine_info, objective=objective)
 
 
 def extract_schedule(tables: DPTables, job_steps: int,
@@ -372,6 +524,76 @@ def extract_schedule(tables: DPTables, job_steps: int,
         out.append(i)
         j -= i
         t = min(t + i + (tables.delta_steps if j > 0 else 0), tables.horizon_idx)
+    return out
+
+
+def evaluate_policy_dollars(K, dists: Sequence, price, *, grid_dt: float,
+                            delta_steps: int = 1, n_sweeps: int = 3,
+                            restart_overhead: float = 0.0) -> np.ndarray:
+    """Expected dollars-to-completion of executing FIXED policy tables ``K``
+    under the dollar objective's own model.
+
+    A float64 host mirror of the dollar recurrence with the min over
+    candidate intervals replaced by K's choice (clipped to ``[1, j]``), run
+    through the same restart-cost fixed point and row order as the solver.
+    Because the solver minimizes over every candidate the evaluator merely
+    follows, ``solve_batch(objective="dollars").V <= evaluate(K_any)``
+    pointwise per sweep by induction — which is what lets the market
+    benchmark compare a makespan-optimal K against a dollar-optimal K in
+    the same currency without Monte-Carlo noise (the solver's float32
+    argmin leaves ~1e-6-relative slack against this float64 evaluation).
+
+    ``K``: ``(S, j_max+1, t_max+1)`` int tables (e.g. ``BatchDPTables.K``);
+    ``dists``: the S lifetime distributions; ``price``: a PriceGrid (one
+    row broadcasts).  Returns float64 ``(S, j_max+1, t_max+1)`` dollar
+    tables; entry ``[s, J, 0]`` is the expected cost of a fresh J-step job.
+    """
+    K = np.asarray(K)
+    S, J1, T = K.shape
+    j_max, t_max = J1 - 1, T - 1
+    prices = np.asarray(price.prices, np.float64)
+    cum = np.asarray(price.cum, np.float64)
+    if prices.shape[0] == 1 and S > 1:
+        prices = np.broadcast_to(prices, (S, prices.shape[1]))
+        cum = np.broadcast_to(cum, (S, cum.shape[1]))
+    pdt = float(price.dt)
+    TX = t_max + 1 + j_max + int(delta_steps)
+    tau = np.arange(TX, dtype=np.float64) * grid_dt
+    kc = np.clip(np.floor(tau / pdt).astype(np.int64), 0, prices.shape[1] - 1)
+    Pc = cum[:, kc] + prices[:, kc] * (tau[None, :] - kc[None, :] * pdt)
+    t = np.arange(t_max + 1)
+    out = np.empty((S, J1, T), np.float64)
+    for s in range(S):
+        d = dists[s]
+        tk = np.arange(t_max + 1, dtype=np.float64) * grid_dt
+        F = np.clip(np.array(d.cdf(tk), np.float64), 0.0, 1.0)
+        atom = max(1.0 - F[-1], 0.0)
+        F[-1] = 1.0
+        H = np.array(d.partial_expectation(np.zeros_like(tk), tk),
+                     np.float64)
+        H[-1] += atom * float(d.L)
+        dead = (1.0 - F) < 1e-6
+        V = np.broadcast_to(Pc[s, :J1, None], (J1, T)).copy()
+        for _ in range(n_sweeps):
+            R = float(restart_overhead) * prices[s, 0] + V[:, 0].copy()
+            for j in range(1, J1):
+                i = np.clip(K[s, j], 1, j)
+                w = np.where(i == j, i, i + int(delta_steps))
+                end = np.minimum(t + w, t_max)
+                endx = t + w
+                Ft, Fe = F[t], F[end]
+                p_fail = np.clip((Fe - Ft) / np.maximum(1.0 - Ft, _EPS),
+                                 0.0, 1.0)
+                dF = np.maximum(Fe - Ft, _EPS)
+                e_lost = np.clip((H[end] - H[t]) / dF - t * grid_dt,
+                                 0.0, w * grid_dt)
+                dP = Pc[s, endx] - Pc[s, t]
+                pb = dP / (w * grid_dt)
+                v_succ = dP + V[j - i, end]
+                v_fail = e_lost * pb + R[j]
+                vj = (1.0 - p_fail) * v_succ + p_fail * v_fail
+                V[j] = np.where(dead, R[j], vj)
+        out[s] = V
     return out
 
 

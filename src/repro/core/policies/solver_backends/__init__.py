@@ -3,12 +3,19 @@
 ``checkpointing.solve`` / ``solve_batch`` dispatch here.  Every backend
 module implements one contract:
 
-    solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
-                       j_max, t_max, delta_steps, n_sweeps) -> (V, K)
+    solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None,
+                       Pc=None, *, j_max, t_max, delta_steps, n_sweeps)
+        -> (V, K)
 
 with stacked ``(S, t_max+1)`` float32 grids (built once by
 ``grids.cdf_grids``) in and ``(S, j_max+1, t_max+1)`` tables out, and the
-``v_init`` warm-start seeding the restart-cost fixed point.  Backends:
+``v_init`` warm-start seeding the restart-cost fixed point.  ``Pc=None``
+selects the makespan objective; a stacked ``(S, TX)`` cumulative-dollar
+grid (``grids.price_cum_grids``, ``TX = t_max+1+j_max+delta_steps``)
+selects the dollar objective, in which case ``restart_overhead`` is the
+per-scenario ``(S,)`` dollar overhead (hours x launch-cell price, folded
+by the dispatcher) so sharding can split it with the other operands.
+Backends:
 
   reference  the retained serial kernel — the bit-exactness anchor;
              batch = a Python loop over scenarios.

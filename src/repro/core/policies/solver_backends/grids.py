@@ -19,6 +19,7 @@ serial reference.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 # Shared guard against zero survival/failure mass in the conditional forms;
 # all backends must use this same constant so their per-element arithmetic
@@ -45,3 +46,83 @@ def cdf_grids(dist, grid_dt: float):
     H_raw = dist.partial_expectation(jnp.zeros_like(tk), tk)
     Hc = H_raw.at[-1].add(atom * L).astype(jnp.float32)
     return Fc, Hc, t_max
+
+
+def price_cum_grids(prices, cum, price_dt: float, grid_dt: float,
+                    t_max: int, ext: int):
+    """Cumulative-dollar grid on the DP age axis, for the dollar objective.
+
+    ``prices``/``cum``/``price_dt`` are a ``market.PriceGrid``'s fields (duck
+    typed so this module stays free of a market import): ``prices`` is
+    ``(S, T_price)`` $/hour cells, ``cum[s, k]`` the dollars accrued through
+    the first ``k`` cells.  Returns ``(Pc, P0)`` where
+
+      ``Pc[s, m]``  float32 ``(S, t_max + 1 + ext)`` — dollars accrued by a VM
+                    of age ``m * grid_dt`` hours, evaluated with exactly the
+                    semantics of ``market.integrate_cost_ref`` (piecewise
+                    linear between cell edges; ages beyond the price horizon
+                    billed at the final cell's price);
+      ``P0[s]``     float64 ``(S,)`` — the launch-cell price, used to bill the
+                    restart overhead.
+
+    The ``ext`` extra cells extend the axis past the DP horizon so the
+    recurrence's ``t + w`` segment-cost gathers never clip: segment dollars
+    are ``Pc[t + w] - Pc[t]`` with ``t <= t_max`` and ``w <= ext``.  All
+    arithmetic is host float64 (matching ``integrate_cost_ref``) with one
+    final float32 cast — the bit-exactness anchor for the dollar objective,
+    mirroring the float32 pin in :func:`cdf_grids`.
+    """
+    prices = np.asarray(prices, np.float64)
+    cum = np.asarray(cum, np.float64)
+    pdt = float(price_dt)
+    tau = np.arange(t_max + 1 + ext, dtype=np.float64) * float(grid_dt)
+    k = np.clip(np.floor(tau / pdt).astype(np.int64), 0, prices.shape[1] - 1)
+    Pc = cum[:, k] + prices[:, k] * (tau[None, :] - k[None, :] * pdt)
+    return Pc.astype(np.float32), prices[:, 0].copy()
+
+
+def dollar_loss_grids(Fc, Hc, Pc, grid_dt: float, *, j_max: int, t_max: int,
+                      delta_steps: int):
+    """Expected-lost-dollars grids for the dollar objective, computed on the
+    host in plain float32 numpy and fed to every backend as an OPERAND.
+
+    Returns ``Elp`` of shape ``(S, 2, t_max + 1, j_max)``: ``Elp[:, 0]`` the
+    non-final-segment variant (``w = i + delta``) and ``Elp[:, 1]`` the
+    final-segment variant (``w = i``) of
+
+        E[lost $ | fail in (t, t+w]] = e_lost(t, w) * dP(t, w) / (w * dt)
+
+    (the conditional expected lost hours times the window's average $/hour).
+    This is deliberately NOT computed inside the kernels: the expression
+    contains mul-feeding-add/sub pairs that XLA:CPU FMA-contracts at the
+    LLVM level, and its contraction choices differ between the serial
+    reference program (one fused loop body) and the batched kernels (hoisted
+    grid fusions) — 1-ulp divergences that ``jax.lax.optimization_barrier``
+    does not survive to prevent (the barrier is elided before codegen).
+    A single host-side numpy evaluation, consumed bit-for-bit by all
+    backends, removes the compiler from the equation entirely — the same
+    pattern as ``Pc`` itself.  Every op below is float32 with explicit
+    casts so NumPy's promotion rules cannot silently widen to f64.
+    """
+    Fc = np.asarray(Fc, np.float32)
+    Hc = np.asarray(Hc, np.float32)
+    Pc = np.asarray(Pc, np.float32)
+    dt = np.float32(grid_dt)
+    eps = np.float32(_EPS)
+    t = np.arange(t_max + 1)
+    i = np.arange(1, j_max + 1)
+    tdt = t.astype(np.float32) * dt                       # (T,)
+    out = []
+    for w in (i + delta_steps, i):
+        end = np.clip(t[:, None] + w[None, :], 0, t_max)  # (T, I)
+        endx = t[:, None] + w[None, :]                    # unclipped
+        wdt = w.astype(np.float32) * dt                   # (I,)
+        Ft = Fc[:, t][:, :, None]
+        Fe = Fc[:, end]
+        dF = np.maximum(Fe - Ft, eps)
+        el = (Hc[:, end] - Hc[:, t][:, :, None]) / dF - tdt[None, :, None]
+        el = np.clip(el, np.float32(0.0), wdt[None, None, :])
+        dP = Pc[:, endx] - Pc[:, t][:, :, None]
+        pb = dP / wdt[None, None, :]
+        out.append(el * pb)
+    return np.stack(out, axis=1)

@@ -6,6 +6,14 @@ Pallas, coarse-to-fine) is measured against the tables this kernel produces.
 It is deliberately unclever — the (age x candidate) grids are recomputed in
 every j iteration and the batch path is a plain Python loop over scenarios —
 because its job is to be obviously faithful to Eqs. 11-15, not fast.
+
+Objectives.  With ``Pc=None`` the recurrence minimizes expected *makespan*
+(hours); with a cumulative-dollar grid ``Pc`` (see ``grids.price_cum_grids``)
+it minimizes expected *dollars-to-completion*: segment work is billed at the
+integrated price over the VM's age window (``dP = Pc[t+w] - Pc[t]``), lost
+work on failure at the window's average price, and the restart overhead at
+the launch-cell price (folded into ``restart_overhead`` by the dispatcher,
+which passes the per-scenario dollar overhead in dollar mode).
 """
 from __future__ import annotations
 
@@ -19,14 +27,26 @@ from .grids import _EPS
 
 @functools.partial(jax.jit, static_argnames=("j_max", "t_max", "delta_steps",
                                              "n_sweeps"))
-def solve_tables(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
-                 j_max: int, t_max: int, delta_steps: int, n_sweeps: int):
+def solve_tables(Fc, Hc, grid_dt, restart_overhead, v_init=None, Pc=None,
+                 Elp=None, *, j_max: int, t_max: int, delta_steps: int,
+                 n_sweeps: int):
     """Returns (V, K) of shapes (j_max+1, t_max+1) for ONE scenario.
 
     ``v_init`` optionally seeds the restart-cost fixed point (same warm-start
     semantics as the batched kernels, one scenario at a time); the cold path
     (``v_init=None``) builds the optimistic ``j*dt`` seed inside the jit and
     stays byte-identical to the pre-refactor kernel.
+
+    ``Pc`` (``(t_max + 1 + j_max + delta_steps,)`` float32) switches the
+    recurrence to the dollar objective.  ``restart_overhead`` must then
+    already be dollar-denominated (hours x launch price), and ``Elp``
+    (``(2, t_max + 1, j_max)`` float32, ``grids.dollar_loss_grids``) carries
+    the expected-lost-dollars grids — precomputed on the host because XLA:CPU
+    FMA-contracts that expression differently in this fused loop body than
+    in the batched kernels' hoisted grids (see ``dollar_loss_grids``).  The
+    extended ``Pc`` tail lets the ``t + w`` segment-cost gathers run past the
+    horizon unclipped, which is what makes a flat price reduce exactly to
+    ``p x makespan``.
     """
     dt = grid_dt
     t_idx = jnp.arange(t_max + 1)
@@ -50,12 +70,26 @@ def solve_tables(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
             St = jnp.maximum(1.0 - Ft, _EPS)
             p_fail = jnp.clip((Fe - Ft) / St, 0.0, 1.0)
             p_succ = 1.0 - p_fail
-            # E[x - t | fail in (t, te]] via H(t) = int_0^t x dF~ (atom incl.)
-            dF = jnp.maximum(Fe - Ft, _EPS)
-            e_lost = (Hc[end] - Hc[t_idx][:, None]) / dF - t_idx[:, None] * dt
-            e_lost = jnp.clip(e_lost, 0.0, w[None, :] * dt)
-            v_succ = w[None, :] * dt + V[j - i_ax[None, :], end]
-            v_fail = e_lost + R[j]
+            if Pc is None:
+                # E[x-t | fail in (t, te]] via H(t) = int_0^t x dF~ (atom
+                # incl.)
+                dF = jnp.maximum(Fe - Ft, _EPS)
+                e_lost = (Hc[end] - Hc[t_idx][:, None]) / dF \
+                    - t_idx[:, None] * dt
+                e_lost = jnp.clip(e_lost, 0.0, w[None, :] * dt)
+                v_succ = w[None, :] * dt + V[j - i_ax[None, :], end]
+                v_fail = e_lost + R[j]
+            else:
+                # dollars: segment billed at integrated price over the age
+                # window (unclipped gather on the extended Pc axis); the
+                # expected lost dollars come from the host-precomputed Elp
+                # grids — in-kernel only gathers, adds and subs remain, all
+                # FMA-contraction-free (see grids.dollar_loss_grids)
+                endx = t_idx[:, None] + w[None, :]        # (T, I), unclipped
+                dP = Pc[endx] - Pc[t_idx][:, None]
+                elp = jnp.where(final[None, :], Elp[1], Elp[0])
+                v_succ = dP + V[j - i_ax[None, :], end]
+                v_fail = elp + R[j]
             cost = p_succ * v_succ + p_fail * v_fail
             cost = jnp.where(valid[None, :], cost, jnp.inf)
             vj = jnp.min(cost, axis=1)
@@ -73,8 +107,14 @@ def solve_tables(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
         return (V, K), None
 
     if v_init is None:
-        # sweep 0 restart estimate: optimistic j*dt
-        V_init = jnp.broadcast_to((jnp.arange(j_max + 1) * dt)[:, None],
+        if Pc is None:
+            # sweep 0 restart estimate: optimistic j*dt
+            seed_col = (jnp.arange(j_max + 1) * dt).astype(jnp.float32)
+        else:
+            # dollar seed: dollars to run j steps from launch, a pure gather
+            # (no arithmetic) so every backend's cold seed is bit-identical
+            seed_col = Pc[:j_max + 1]
+        V_init = jnp.broadcast_to(seed_col[:, None],
                                   (j_max + 1, t_max + 1)).astype(jnp.float32)
     else:
         V_init = v_init.astype(jnp.float32)
@@ -84,17 +124,25 @@ def solve_tables(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
     return V, K
 
 
-def solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None, *,
-                       j_max: int, t_max: int, delta_steps: int,
-                       n_sweeps: int):
+def solve_tables_batch(Fc, Hc, grid_dt, restart_overhead, v_init=None,
+                       Pc=None, Elp=None, *, j_max: int, t_max: int,
+                       delta_steps: int, n_sweeps: int):
     """Batch adapter for the reference kernel: a plain Python loop over the
     scenario axis (one compiled per-scenario solve, S dispatches).  This is
     the ``backend="reference"`` path of ``solve_batch`` — slow on purpose,
-    and the yardstick the equivalence tests hold the fast backends to."""
+    and the yardstick the equivalence tests hold the fast backends to.
+
+    In dollar mode (``Pc`` an ``(S, TX)`` batch, ``Elp`` an ``(S, 2, T, I)``
+    batch) ``restart_overhead`` is the per-scenario ``(S,)`` dollar
+    overhead; each scenario gets its own slice.
+    """
     outs = []
     for s in range(Fc.shape[0]):
         vi = None if v_init is None else v_init[s]
-        outs.append(solve_tables(Fc[s], Hc[s], grid_dt, restart_overhead, vi,
+        pcs = None if Pc is None else Pc[s]
+        eps = None if Elp is None else Elp[s]
+        ro = restart_overhead if Pc is None else restart_overhead[s]
+        outs.append(solve_tables(Fc[s], Hc[s], grid_dt, ro, vi, pcs, eps,
                                  j_max=j_max, t_max=t_max,
                                  delta_steps=delta_steps, n_sweeps=n_sweeps))
     V = jnp.stack([o[0] for o in outs])

@@ -132,18 +132,28 @@ def cone_views(gp, delta_steps, I_len, A):
     to the same per-element codegen as the full-extent sweep (bit-safety);
     the final-segment (``i == j``) grids stay full candidate width because
     row j always reads their column ``j - 1``."""
-    pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full = gp
-    return (i_full[:I_len], i_full[:I_len] + delta_steps,
-            pf_nf_f[:, :A, :I_len], el_nf_f[:, :A, :I_len],
-            pf_fd_f[:, :A, :], el_fd_f[:, :A, :],
-            end_nf_f[0][:A, :I_len], end_fd_f[0][:A, :])
+    pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full = gp[:7]
+    sd = (i_full[:I_len], i_full[:I_len] + delta_steps,
+          pf_nf_f[:, :A, :I_len], el_nf_f[:, :A, :I_len],
+          pf_fd_f[:, :A, :], el_fd_f[:, :A, :],
+          end_nf_f[0][:A, :I_len], end_fd_f[0][:A, :])
+    if len(gp) > 7:
+        dp_nf_f, elp_nf_f, dp_fd_f, elp_fd_f = gp[7:]
+        sd = sd + (dp_nf_f[:, :A, :I_len], elp_nf_f[:, :A, :I_len],
+                   dp_fd_f[:, :A, :], elp_fd_f[:, :A, :])
+    return sd
 
 
 def _row_values(sd, V, R, dead_a, dt, j):
     """Value row j over a cone segment's sliced views — ``xla.body_factory``'s
     exact expression minus the argmin payload, with the ``i == j`` candidate
     folded in by an (exact) two-way min instead of the column patch."""
-    i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
+    dollar = len(sd) > 8
+    if dollar:
+        (i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd,
+         dp_nf, elp_nf, dp_fd, elp_fd) = sd
+    else:
+        i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
     valid = i_ax < j                      # i == j is the fd candidate below
 
     def one(V1, pf1, el1, pffd1, elfd1, Rj1):
@@ -160,7 +170,26 @@ def _row_values(sd, V, R, dead_a, dt, j):
             + pffd1[:, j - 1] * (elfd1[:, j - 1] + Rj1)
         return jnp.minimum(m_nf, cost_f)
 
-    vj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd, R[:, j][:, None])
+    def one_dollar(V1, pf1, pffd1, dp1, elp1, dpfd1, elpfd1, Rj1):
+        Vg = V1[(j - i_ax)[None, :], end_nf]
+        v_succ = dp1 + Vg
+        v_fail = elp1 + Rj1
+        cost = (1.0 - pf1) * v_succ + pf1 * v_fail
+        costm = jnp.where(valid[None, :], cost, jnp.inf)
+        m_nf = jnp.min(costm, axis=1)
+        # final-segment candidate i == j: w = i, V[j-i] == V[0]
+        colV = V1[0, end_fd[:, j - 1]]
+        vs_f = dpfd1[:, j - 1] + colV
+        cost_f = (1.0 - pffd1[:, j - 1]) * vs_f \
+            + pffd1[:, j - 1] * (elpfd1[:, j - 1] + Rj1)
+        return jnp.minimum(m_nf, cost_f)
+
+    if dollar:
+        vj = jax.vmap(one_dollar)(V, pf_nf, pf_fd,
+                                  dp_nf, elp_nf, dp_fd, elp_fd,
+                                  R[:, j][:, None])
+    else:
+        vj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd, R[:, j][:, None])
     return jnp.where(dead_a, R[:, j][:, None], vj)
 
 
@@ -207,37 +236,52 @@ def _col0_check(gp, cone_segs, V, R, dead, dt, *, delta_steps):
     return ok
 
 
-def _refined_impl(Fc, Hc, grid_dt, restart_overhead, v_init_col0=None, *,
-                  j_max: int, t_max: int, delta_steps: int, n_sweeps: int,
-                  caps: tuple):
+def _refined_impl(Fc, Hc, grid_dt, restart_overhead, v_init_col0=None,
+                  Pc=None, Elp=None, *, j_max: int, t_max: int,
+                  delta_steps: int, n_sweeps: int, caps: tuple):
     """The fine-level pipeline: pruned pre-sweeps, then ONE full-resolution
     sweep through the production kernel's own machinery.  Returns
-    ``(V, K, ok)`` with ``ok`` a per-scenario verification mask."""
+    ``(V, K, ok)`` with ``ok`` a per-scenario verification mask.
+
+    The dollar objective (``Pc``/``Elp`` given) changes only the hoisted
+    grid set and the cost expression inside ``_row_values`` — the cone
+    geometry, caps mechanism and column-0 verification are
+    objective-independent because the sweeps still couple only through
+    ``V[:, :, 0]``.  In that mode ``restart_overhead`` is the per-scenario
+    ``(S,)`` dollar overhead.
+    """
     dt = grid_dt
     S = Fc.shape[0]
     dead = (1.0 - Fc) < 1e-6
     segs = xla.seg_plan(j_max)
     gp = xla.candidate_grids(Fc, Hc, dt, j_max=j_max, t_max=t_max,
-                             delta_steps=delta_steps)
+                             delta_steps=delta_steps, Pc=Pc, Elp=Elp)
     seg_data = [xla.seg_views(gp, delta_steps, I) for I, _, _ in segs]
     cone_segs = cone_segments(j_max, t_max, delta_steps)
+    # pre-shape so `restart_overhead + col0` broadcasts identically whether
+    # ro is the makespan scalar or the (S,) dollar vector
+    ro_b = restart_overhead if Pc is None else restart_overhead[:, None]
 
     if v_init_col0 is None:
-        # cold start: the optimistic j*dt seed's column 0 (matches the plain
-        # kernels' cold V_init exactly)
-        col0 = jnp.broadcast_to((jnp.arange(j_max + 1) * dt)[None, :],
-                                (S, j_max + 1)).astype(jnp.float32)
+        if Pc is None:
+            # cold start: the optimistic j*dt seed's column 0 (matches the
+            # plain kernels' cold V_init exactly)
+            col0 = jnp.broadcast_to((jnp.arange(j_max + 1) * dt)[None, :],
+                                    (S, j_max + 1)).astype(jnp.float32)
+        else:
+            # dollar seed: Pc prefix gather, matches the plain kernels
+            col0 = Pc[:, :j_max + 1].astype(jnp.float32)
     else:
         col0 = v_init_col0.astype(jnp.float32)
 
     ok = jnp.ones((S,), bool)
     for _ in range(n_sweeps - 1):
         col0, ok_k = _cone_presweep(
-            gp, cone_segs, caps, col0, dead, dt, restart_overhead,
+            gp, cone_segs, caps, col0, dead, dt, ro_b,
             j_max=j_max, t_max=t_max, delta_steps=delta_steps)
         ok = ok & ok_k
 
-    R = restart_overhead + col0
+    R = ro_b + col0
     V, K = xla.sweep_from_R(gp, seg_data, segs, R, dead, dt,
                             j_max=j_max, t_max=t_max)
     return V, K, ok
@@ -249,11 +293,12 @@ refined_solve = jax.jit(
 
 
 def coarse_tables(Fc_c, Hc_c, grid_dt_c, restart_overhead, *, j_max_c,
-                  t_max_c, delta_steps_c, n_sweeps):
+                  t_max_c, delta_steps_c, n_sweeps, Pc_c=None, Elp_c=None):
     """The coarse hint solve: a plain XLA solve on the ``factor x`` grid.
     Only ``K`` is used (argmin hints); cost is ~``factor**-3`` of the fine
     solve."""
     _, Kc = xla.solve_tables_batch(
-        Fc_c, Hc_c, grid_dt_c, restart_overhead, None, j_max=j_max_c,
-        t_max=t_max_c, delta_steps=delta_steps_c, n_sweeps=n_sweeps)
+        Fc_c, Hc_c, grid_dt_c, restart_overhead, None, Pc_c, Elp_c,
+        j_max=j_max_c, t_max=t_max_c, delta_steps=delta_steps_c,
+        n_sweeps=n_sweeps)
     return Kc

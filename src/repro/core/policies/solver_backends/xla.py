@@ -24,6 +24,13 @@ restructuring the loop body for throughput:
   * the j loop runs in three segments (thirds of the remaining-work axis)
     so early rows do not scan the full candidate axis; all segments share
     column-prefix views of one precomputed grid set.
+
+The dollar objective (``Pc`` a cumulative-dollar grid, see
+``grids.price_cum_grids``) rides the same structure: the per-segment dollar
+cost ``dP`` and average price ``pb`` are j-invariant too, so they join the
+hoisted grid set (7-tuple -> 11-tuple) and the loop body swaps the two cost
+expressions — same gathers, same argmin, bit-identical to the reference's
+dollar branch per scenario slice.
 """
 from __future__ import annotations
 
@@ -45,13 +52,20 @@ def seg_plan(j_max: int):
     return [(j_max, 1, j_max + 1)]
 
 
-def candidate_grids(Fc, Hc, dt, *, j_max, t_max, delta_steps):
+def candidate_grids(Fc, Hc, dt, *, j_max, t_max, delta_steps, Pc=None,
+                    Elp=None):
     """Hoist the j-invariant (VM age x candidate) grids, vmapped over the
     scenario axis.  Identical per-element arithmetic to the reference body.
 
     Returns ``(pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f,
     i_full)`` — the non-final (``w = i + delta``) and final-segment
     (``w = i``) probability/loss/end grids plus the full candidate axis.
+    With ``Pc``/``Elp`` (dollar objective) the tuple gains ``(dp_nf_f,
+    elp_nf_f, dp_fd_f, elp_fd_f)`` — segment dollars ``dP`` (gathered on
+    the extended, unclipped price axis; a contraction-free sub of gathers)
+    and the host-precomputed expected-lost-dollars grids from
+    ``grids.dollar_loss_grids``, passed through untouched so the reference
+    kernel consumes the very same bits.
     """
     t_idx = jnp.arange(t_max + 1)
     i_full = jnp.arange(1, j_max + 1)
@@ -71,25 +85,54 @@ def candidate_grids(Fc, Hc, dt, *, j_max, t_max, delta_steps):
         lambda f, h: grids(f, h, i_full + delta_steps))(Fc, Hc)
     pf_fd_f, el_fd_f, end_fd_f = jax.vmap(
         lambda f, h: grids(f, h, i_full))(Fc, Hc)
-    return pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full
+    base = (pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full)
+    if Pc is None:
+        return base
+
+    def dgrids(Pc1, w):
+        endx = t_idx[:, None] + w[None, :]                # unclipped
+        return Pc1[endx] - Pc1[t_idx][:, None]
+
+    dp_nf_f = jax.vmap(lambda p: dgrids(p, i_full + delta_steps))(Pc)
+    dp_fd_f = jax.vmap(lambda p: dgrids(p, i_full))(Pc)
+    return base + (dp_nf_f, Elp[:, 0], dp_fd_f, Elp[:, 1])
 
 
 def seg_views(gp, delta_steps, I_len):
     """A shorter candidate axis is a column prefix of the full grids (column
     i's values depend only on i), so segments share one precomputed set;
     end grids are parameter-independent (one copy)."""
-    pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full = gp
-    return (i_full[:I_len], i_full[:I_len] + delta_steps,
-            pf_nf_f[:, :, :I_len], el_nf_f[:, :, :I_len],
-            pf_fd_f[:, :, :I_len], el_fd_f[:, :, :I_len],
-            end_nf_f[0][:, :I_len], end_fd_f[0][:, :I_len])
+    pf_nf_f, el_nf_f, end_nf_f, pf_fd_f, el_fd_f, end_fd_f, i_full = gp[:7]
+    sd = (i_full[:I_len], i_full[:I_len] + delta_steps,
+          pf_nf_f[:, :, :I_len], el_nf_f[:, :, :I_len],
+          pf_fd_f[:, :, :I_len], el_fd_f[:, :, :I_len],
+          end_nf_f[0][:, :I_len], end_fd_f[0][:, :I_len])
+    if len(gp) > 7:
+        dp_nf_f, elp_nf_f, dp_fd_f, elp_fd_f = gp[7:]
+        sd = sd + (dp_nf_f[:, :, :I_len], elp_nf_f[:, :, :I_len],
+                   dp_fd_f[:, :, :I_len], elp_fd_f[:, :, :I_len])
+    return sd
 
 
 def body_factory(sd, R, dead, dt, j_max):
     """One j-row update over a segment's candidate prefix (see module
     docstring for the restructurings vs the reference body)."""
-    i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
+    dollar = len(sd) > 8
+    if dollar:
+        (i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd,
+         dp_nf, elp_nf, dp_fd, elp_fd) = sd
+    else:
+        i_ax, w_nf, pf_nf, el_nf, pf_fd, el_fd, end_nf, end_fd = sd
     I_len = int(i_ax.shape[0])
+
+    def _minimize(cost, valid):
+        costm = jnp.where(valid[None, :], cost, jnp.inf)
+        vj = jnp.min(costm, axis=1)
+        # first-match argmin: maximize (I_len - idx) over the minima
+        eq = (costm == vj[:, None]) & valid[None, :]
+        payload = jnp.where(eq, I_len - jnp.arange(I_len)[None, :], 0)
+        kj = (I_len + 1 - jnp.max(payload, axis=1)).astype(jnp.int32)
+        return vj, kj
 
     def body(j, VK):
         V, K = VK
@@ -107,16 +150,29 @@ def body_factory(sd, R, dead, dt, j_max):
                 + pffd1[:, j - 1] * (elfd1[:, j - 1] + Rj1)
             cost = jax.lax.dynamic_update_slice(cost, cost_f[:, None],
                                                 (0, j - 1))
-            costm = jnp.where(valid[None, :], cost, jnp.inf)
-            vj = jnp.min(costm, axis=1)
-            # first-match argmin: maximize (I_len - idx) over the minima
-            eq = (costm == vj[:, None]) & valid[None, :]
-            payload = jnp.where(eq, I_len - jnp.arange(I_len)[None, :], 0)
-            kj = (I_len + 1 - jnp.max(payload, axis=1)).astype(jnp.int32)
-            return vj, kj
+            return _minimize(cost, valid)
 
-        vj, kj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd,
-                               R[:, j][:, None])
+        def one_dollar(V1, pf1, pffd1, dp1, elp1, dpfd1, elpfd1, Rj1):
+            Vg = V1[(j - i_ax)[None, :], end_nf]
+            v_succ = dp1 + Vg
+            v_fail = elp1 + Rj1
+            cost = (1.0 - pf1) * v_succ + pf1 * v_fail
+            # final-segment candidate i == j: w = i, V[j-i] == V[0]
+            colV = V1[0, end_fd[:, j - 1]]
+            vs_f = dpfd1[:, j - 1] + colV
+            cost_f = (1.0 - pffd1[:, j - 1]) * vs_f \
+                + pffd1[:, j - 1] * (elpfd1[:, j - 1] + Rj1)
+            cost = jax.lax.dynamic_update_slice(cost, cost_f[:, None],
+                                                (0, j - 1))
+            return _minimize(cost, valid)
+
+        if dollar:
+            vj, kj = jax.vmap(one_dollar)(V, pf_nf, pf_fd,
+                                          dp_nf, elp_nf, dp_fd, elp_fd,
+                                          R[:, j][:, None])
+        else:
+            vj, kj = jax.vmap(one)(V, pf_nf, el_nf, pf_fd, el_fd,
+                                   R[:, j][:, None])
         vj = jnp.where(dead, R[:, j][:, None], vj)
         kj = jnp.where(dead, jnp.minimum(j, j_max), kj)
         V = jax.vmap(lambda V1, r: jax.lax.dynamic_update_slice(
@@ -141,8 +197,8 @@ def sweep_from_R(gp, seg_data, segs, R, dead, dt, *, j_max, t_max):
     return VK
 
 
-def _impl(Fc, Hc, grid_dt, restart_overhead, v_init=None, *, j_max: int,
-          t_max: int, delta_steps: int, n_sweeps: int):
+def _impl(Fc, Hc, grid_dt, restart_overhead, v_init=None, Pc=None, Elp=None,
+          *, j_max: int, t_max: int, delta_steps: int, n_sweeps: int):
     dt = grid_dt
     T = t_max + 1
     S = Fc.shape[0]
@@ -150,22 +206,32 @@ def _impl(Fc, Hc, grid_dt, restart_overhead, v_init=None, *, j_max: int,
     dead = Sc < 1e-6                                      # (S, T)
     segs = seg_plan(j_max)
     gp = candidate_grids(Fc, Hc, dt, j_max=j_max, t_max=t_max,
-                         delta_steps=delta_steps)
+                         delta_steps=delta_steps, Pc=Pc, Elp=Elp)
     seg_data = [seg_views(gp, delta_steps, I) for I, _, _ in segs]
 
     def one_sweep(carry, _):
         V_prev, _ = carry
-        R = restart_overhead + V_prev[:, :, 0]            # (S, j_max+1)
+        if Pc is None:
+            R = restart_overhead + V_prev[:, :, 0]        # (S, j_max+1)
+        else:
+            # dollar mode: restart_overhead is the per-scenario (S,) dollar
+            # overhead (hours x launch price, folded by the dispatcher)
+            R = restart_overhead[:, None] + V_prev[:, :, 0]
         VK = sweep_from_R(gp, seg_data, segs, R, dead, dt,
                           j_max=j_max, t_max=t_max)
         return VK, None
 
     if v_init is None:
-        # cold start: optimistic j*dt (built inside the jit, exactly as the
-        # reference does — the None-vs-array pytree structure gives the warm
-        # path its own trace, so this cold graph stays byte-identical to the
-        # pre-warm-start kernel and the solve/solve_batch bit contract holds)
-        v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
+        if Pc is None:
+            # cold start: optimistic j*dt (built inside the jit, exactly as
+            # the reference does — the None-vs-array pytree structure gives
+            # the warm path its own trace, so this cold graph stays
+            # byte-identical to the pre-warm-start kernel and the
+            # solve/solve_batch bit contract holds)
+            v0 = (jnp.arange(j_max + 1) * dt)[None, :, None]
+        else:
+            # dollar seed: Pc prefix gather, bit-identical across backends
+            v0 = Pc[:, :j_max + 1, None]
         V_init = jnp.broadcast_to(v0, (S, j_max + 1, T)).astype(jnp.float32)
     else:
         # warm start: seed the restart-cost fixed point with a previously

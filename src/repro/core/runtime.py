@@ -118,6 +118,11 @@ class RuntimeConfig:
     # REPRO_SOLVER_BACKEND env override
     solver_backend: str = "auto"
     solver_refine: bool = False         # coarse-to-fine pre-sweep pruning
+    # DP objective (see docs/solver.md): "makespan" optimises expected
+    # hours-to-completion; "dollars" prices every segment off the live
+    # ticker and optimises expected dollars-to-completion.  Dollars
+    # requires a price_feed at construction time.
+    dp_objective: str = "makespan"
     # tracker
     window: int = 256
     refit_every: int = 64
@@ -183,6 +188,10 @@ class FleetRuntime:
         # is billed at the price the feed shows when the VM launches —
         # the same launch-cell convention as the service billing
         self.price_feed = price_feed
+        if cfg.dp_objective == "dollars" and price_feed is None:
+            raise ValueError("dp_objective='dollars' requires a price_feed: "
+                             "the dollar DP prices segments off the live "
+                             "ticker")
         self.vm_hours_streamed = 0.0
         self.dollars_streamed = 0.0
         self.stream = stream or FleetStream(seed=cfg.stream_seed,
@@ -246,10 +255,16 @@ class FleetRuntime:
         t_max = int(round(float(dists[-1].L) / cfg.grid_dt))
         want = (len(dists), cfg.job_steps + 1, t_max + 1)
         warm = (warm and cfg.warm_start and self.live_tables is not None
-                and self.live_tables.V.shape == want)
+                and self.live_tables.V.shape == want
+                and getattr(self.live_tables, "objective", "makespan")
+                == cfg.dp_objective)
         if inject and self.injector is not None \
                 and self.injector.take("solve_timeout", self.obs):
             raise SolveTimeout("injected solve timeout")
+        # dollar objective: snapshot the live ticker from the market clock
+        # forward over the solve horizon; one row broadcasts over scenarios
+        price = (self.price_feed.grid(float(dists[-1].L))
+                 if cfg.dp_objective == "dollars" else None)
         t0 = time.perf_counter()
         tab = ckpt.solve_batch(
             dists, cfg.job_steps, grid_dt=cfg.grid_dt,
@@ -257,7 +272,8 @@ class FleetRuntime:
             n_sweeps=cfg.warm_sweeps if warm else cfg.n_sweeps,
             restart_overhead=cfg.restart_overhead,
             v_init=self.live_tables.V if warm else None,
-            backend=cfg.solver_backend, refine=cfg.solver_refine)
+            backend=cfg.solver_backend, refine=cfg.solver_refine,
+            objective=cfg.dp_objective, price=price)
         dt = time.perf_counter() - t0
         if dt > cfg.solve_budget_s:
             raise SolveTimeout(f"solve took {dt:.2f}s "

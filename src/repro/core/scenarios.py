@@ -520,7 +520,8 @@ def solve_market_tables(scenarios: Iterable, market, *,
                         delta_steps: int = 1, n_sweeps: int = 3,
                         restart_overhead: float = 0.0,
                         solver_backend: str = "auto",
-                        solver_refine: bool = False) -> dict:
+                        solver_refine: bool = False,
+                        dp_objective: str = "makespan") -> dict:
     """Solve one ``BatchDPTables`` per market regime, for ``tables=`` reuse.
 
     Each regime's tables are solved against the CRUNCH-COUPLED Eq. 1 models
@@ -530,15 +531,25 @@ def solve_market_tables(scenarios: Iterable, market, *,
     hazard.  Feed the result to :func:`sweep_market` ``tables=`` to
     re-evaluate fresh seeds/trial counts/policies without re-solving — the
     same whole-grid reuse contract as ``sweep_checkpointing``.
+
+    ``dp_objective="dollars"`` solves each regime under the dollar
+    objective against the market's own price grid as seen from that
+    regime's launch time (``market.grid().shift(launch_time)``) — V becomes
+    expected dollars-to-completion and K stretches checkpoint intervals
+    through priced windows.
     """
     scs = _resolve(scenarios)
+    grid0 = market.grid() if dp_objective == "dollars" else None
     out = {}
     for regime in regimes:
-        dist_list = market.crunch_dists(scs, market.launch_time(regime))
+        t0 = market.launch_time(regime)
+        dist_list = market.crunch_dists(scs, t0)
+        price = None if grid0 is None else grid0.shift(t0)
         out[regime] = ckpt.solve_batch(
             dist_list, job_steps, grid_dt=grid_dt, delta_steps=delta_steps,
             n_sweeps=n_sweeps, restart_overhead=restart_overhead,
-            backend=solver_backend, refine=solver_refine)
+            backend=solver_backend, refine=solver_refine,
+            objective=dp_objective, price=price)
     return out
 
 
@@ -570,7 +581,8 @@ def sweep_market(scenarios: Iterable, *, market=None,
                  migrate_overhead_hours: float = 2.0 / 60.0,
                  cost_path: str = "kernel",
                  solver_backend: str = "auto",
-                 solver_refine: bool = False) -> list:
+                 solver_refine: bool = False,
+                 dp_objective: str = "makespan") -> list:
     """Expand (scenario x regime x cost-policy x seed) in dollars.
 
     The market layer on the checkpointing sweep: each regime launches the
@@ -602,6 +614,16 @@ def sweep_market(scenarios: Iterable, *, market=None,
     ``cost_path="reference"`` bills through the serial
     ``market.integrate_cost_ref`` loop instead of the batched gather — the
     bit-exactness cross-check used by ``benchmarks/market_bench.py``.
+
+    ``dp_objective="dollars"`` solves (or expects, with ``tables=``) the
+    dollar-objective tables against each regime's launch-shifted price
+    grid: the checkpoint schedule itself then minimizes expected dollars.
+    With dollar tables the ``feasible_slack`` gate for ``"cheapest"``/
+    ``"migrate"`` substitution compares expected *dollars* instead of
+    expected makespans — the slack becomes dollar-denominated, which is
+    the natural reading of "feasible" under a cost objective.  Supplied
+    ``tables=`` must match: a makespan table under
+    ``dp_objective="dollars"`` (or vice versa) raises.
     """
     from . import market as market_mod
     scs = _resolve(scenarios)
@@ -633,6 +655,7 @@ def sweep_market(scenarios: Iterable, *, market=None,
     for regime in regimes:
         t0 = market.launch_time(regime)
         dist_list = market.crunch_dists(scs, t0)
+        g = grid0.shift(t0)
         if tables is not None:
             if regime not in tables:
                 raise ValueError(f"tables= has no entry for regime "
@@ -649,15 +672,22 @@ def sweep_market(scenarios: Iterable, *, market=None,
                 raise ValueError("tables was solved for a different "
                                  "(grid_dt, delta_steps, restart_overhead) "
                                  "workload")
+            got = getattr(batch, "objective", "makespan")
+            if got != dp_objective:
+                raise ValueError(
+                    f"tables[{regime!r}] was solved with objective={got!r}; "
+                    f"this sweep requested dp_objective={dp_objective!r}")
         else:
             batch = ckpt.solve_batch(
                 dist_list, job_steps, grid_dt=grid_dt,
                 delta_steps=delta_steps, n_sweeps=n_sweeps,
                 restart_overhead=restart_overhead, backend=solver_backend,
-                refine=solver_refine)
+                refine=solver_refine, objective=dp_objective,
+                price=g if dp_objective == "dollars" else None)
+        # per-leaf expected cost of a fresh job (hours, or dollars under the
+        # dollar objective) — the substitution policies' feasibility signal
         exp_mk = np.array([batch.expected_makespan(s, job_steps)
                            for s in range(S)])
-        g = grid0.shift(t0)
         launch_p = g.prices[:, 0]
         crunch_on = [regime == "crunch"
                      and float(np.float64(p.crunch_t1))

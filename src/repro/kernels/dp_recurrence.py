@@ -24,6 +24,13 @@ a different fusion schedule rounds differently at ULP scale, so this backend
 is tolerance-tested against the reference, not bit-pinned (see
 ``docs/solver.md``).
 
+The dollar objective adds one more ``(1, T_pad)`` row per program — the
+cumulative-dollar grid ``Pc`` (``grids.price_cum_grids``) — and a per-program
+scalar dollar restart overhead: segment dollars ``dP = Pc[t+w] - Pc[t]`` are
+the same shifted-slice pattern as the CDF deltas.  The cumulative row is
+built host-side on the extended age axis, so edge padding beyond it only
+ever feeds dead lanes (whose values are overwritten with ``Rj``).
+
 Oracle: ``solver_backends.reference``.  On CPU containers the kernel runs
 with ``interpret=True`` (tests/test_solver_backends.py, marker ``pallas``).
 """
@@ -39,9 +46,15 @@ from jax.experimental.pallas import tpu as pltpu
 _EPS = 1e-9
 
 
-def _dp_kernel(fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr, *,
-               dt: float, restart_overhead: float, j_max: int, t_max: int,
-               delta_steps: int, n_sweeps: int, TPL: int, TB: int):
+def _dp_kernel(*refs, dt: float, restart_overhead: float, j_max: int,
+               t_max: int, delta_steps: int, n_sweeps: int, TPL: int,
+               TB: int, price: bool):
+    if price:
+        fc_ref, hc_ref, c0_ref, pc_ref, ro_ref, v_out, k_out, \
+            v_scr, c0_scr = refs
+    else:
+        fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr = refs
+        pc_ref = ro_ref = None
     T = t_max + 1
     dtf = jnp.float32(dt)
     rof = jnp.float32(restart_overhead)
@@ -52,6 +65,10 @@ def _dp_kernel(fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr, *,
     St = jnp.maximum(1.0 - Ft, _EPS)
     dead = (1.0 - Ft) < 1e-6                          # padded lanes: Fc=1
     t_dt = jax.lax.broadcasted_iota(jnp.int32, (1, TPL), 1) * dtf
+    if price:
+        pc = pc_ref[...]                              # (1, TB) cumulative $
+        Pt = pc[:, :TPL]
+        rof = ro_ref[0, 0]                            # per-scenario $ overhead
 
     # row 0 (job done): V = 0 at every age, including the horizon padding
     v_scr[0, :] = jnp.zeros((TB,), jnp.float32)
@@ -78,8 +95,16 @@ def _dp_kernel(fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr, *,
                 e_lost = (He - Ht) / dF - t_dt
                 e_lost = jnp.clip(e_lost, 0.0, w * dtf)
                 vrow = pl.load(v_scr, (pl.ds(j - i, 1), pl.ds(w, TPL)))
-                v_succ = w * dtf + vrow
-                cost = (1.0 - p_fail) * v_succ + p_fail * (e_lost + Rj)
+                if price:
+                    Pe = jax.lax.dynamic_slice(pc, (0, w), (1, TPL))
+                    dP = Pe - Pt
+                    pb = dP / (w * dtf)
+                    v_succ = dP + vrow
+                    cost = (1.0 - p_fail) * v_succ \
+                        + p_fail * (e_lost * pb + Rj)
+                else:
+                    v_succ = w * dtf + vrow
+                    cost = (1.0 - p_fail) * v_succ + p_fail * (e_lost + Rj)
                 upd = cost < m
                 return jnp.where(upd, cost, m), jnp.where(upd, i, k)
 
@@ -105,16 +130,22 @@ def _dp_kernel(fc_ref, hc_ref, c0_ref, v_out, k_out, v_scr, c0_scr, *,
 
 def dp_recurrence(Fc, Hc, col0, *, grid_dt: float, restart_overhead: float,
                   j_max: int, t_max: int, delta_steps: int, n_sweeps: int,
-                  interpret: bool = False):
+                  interpret: bool = False, Pc=None, Ro=None):
     """Solve the batched checkpointing DP.
 
     Fc, Hc: (S, t_max+1) f32 CDF / partial-expectation grids (see
     ``solver_backends.grids``); col0: (S, j_max+1) f32 seed for the
     restart-cost column (cold ``j*dt`` or a warm start's ``V[:, :, 0]``).
     Returns (V, K) of shapes (S, j_max+1, t_max+1).
+
+    Dollar objective: ``Pc`` is the (S, t_max+1+j_max+delta_steps) f32
+    cumulative-dollar grid and ``Ro`` the (S,) f32 dollar restart overhead
+    (``restart_overhead`` is then ignored).  ``col0`` must be the dollar
+    seed (``Pc[:, :j_max+1]`` cold, or a warm dollar table's column 0).
     """
     S, T = Fc.shape
     assert T == t_max + 1, (T, t_max)
+    price = Pc is not None
     pad = j_max + delta_steps + 8        # max age shift is j_max + delta
     TPL = T + pad                        # compute width (tail lanes: dead)
     TB = TPL + pad                       # buffer width for shifted loads
@@ -123,15 +154,27 @@ def dp_recurrence(Fc, Hc, col0, *, grid_dt: float, restart_overhead: float,
     kernel = functools.partial(
         _dp_kernel, dt=float(grid_dt), restart_overhead=float(restart_overhead),
         j_max=j_max, t_max=t_max, delta_steps=delta_steps, n_sweeps=n_sweeps,
-        TPL=TPL, TB=TB)
+        TPL=TPL, TB=TB, price=price)
+    in_specs = [
+        pl.BlockSpec((1, TB), lambda s: (s, 0)),
+        pl.BlockSpec((1, TB), lambda s: (s, 0)),
+        pl.BlockSpec((1, j_max + 1), lambda s: (s, 0)),
+    ]
+    inputs = [fc, hc, col0]
+    if price:
+        # the extended Pc axis already covers every live-lane gather
+        # (t < T, shift <= j_max + delta); edge padding past it only feeds
+        # dead lanes whose values are overwritten with Rj
+        assert Ro is not None, "dollar mode needs the (S,) dollar overhead"
+        pc = jnp.pad(jnp.asarray(Pc, jnp.float32),
+                     ((0, 0), (0, TB - Pc.shape[1])), mode="edge")
+        in_specs += [pl.BlockSpec((1, TB), lambda s: (s, 0)),
+                     pl.BlockSpec((1, 1), lambda s: (s, 0))]
+        inputs += [pc, jnp.asarray(Ro, jnp.float32).reshape(S, 1)]
     V, K = pl.pallas_call(
         kernel,
         grid=(S,),
-        in_specs=[
-            pl.BlockSpec((1, TB), lambda s: (s, 0)),
-            pl.BlockSpec((1, TB), lambda s: (s, 0)),
-            pl.BlockSpec((1, j_max + 1), lambda s: (s, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, j_max + 1, T), lambda s: (s, 0, 0)),
             pl.BlockSpec((1, j_max + 1, T), lambda s: (s, 0, 0)),
@@ -145,5 +188,5 @@ def dp_recurrence(Fc, Hc, col0, *, grid_dt: float, restart_overhead: float,
             pltpu.VMEM((1, j_max + 1), jnp.float32),
         ],
         interpret=interpret,
-    )(fc, hc, col0)
+    )(*inputs)
     return V, K

@@ -50,6 +50,63 @@ def _oracle_tables(dist, j_max, t_max, delta_steps, n_sweeps,
     return V
 
 
+def _dollar_oracle_tables(dist, prices, pdt, j_max, t_max, delta_steps,
+                          n_sweeps, restart_overhead):
+    """Plain-python mirror of the DOLLAR recursion: every segment is billed
+    at the integrated price over its age window (ages beyond the price
+    trace bill at the last cell), expected lost work is priced at the
+    segment's mean rate, and the restart overhead is billed at the
+    launch-cell price."""
+    dt = GRID_DT
+    L = float(dist.L)
+    tk = np.arange(t_max + 1) * dt
+    F = np.clip(np.array(dist.cdf(tk)), 0.0, 1.0)
+    atom = max(1.0 - F[-1], 0.0)
+    F[-1] = 1.0
+    H = np.array(dist.partial_expectation(np.zeros_like(tk), tk))
+    H[-1] += atom * L
+    eps = 1e-9
+
+    prices = np.asarray(prices, np.float64)
+    TX = t_max + 1 + j_max + delta_steps
+
+    def pcum(k):
+        # cumulative dollars of the first k*dt hours of a VM's life
+        tau = k * dt
+        c = min(int(np.floor(tau / pdt)), len(prices) - 1)
+        return float(np.sum(prices[:c]) * pdt + prices[c] * (tau - c * pdt))
+
+    Pc = np.array([pcum(k) for k in range(TX)])
+    ro_dollar = restart_overhead * prices[0]
+
+    V = np.tile(Pc[: j_max + 1][:, None], (1, t_max + 1))
+    for _ in range(n_sweeps):
+        R = ro_dollar + V[:, 0].copy()
+        V_new = np.zeros_like(V)
+        for j in range(1, j_max + 1):
+            for t in range(t_max + 1):
+                if 1.0 - F[t] < 1e-6:
+                    V_new[j, t] = R[j]
+                    continue
+                best = np.inf
+                for i in range(1, j + 1):
+                    w = i if i == j else i + delta_steps
+                    e = min(t + w, t_max)
+                    p_fail = min(max((F[e] - F[t]) / max(1 - F[t], eps),
+                                     0.0), 1.0)
+                    dF = max(F[e] - F[t], eps)
+                    e_lost = (H[e] - H[t]) / dF - t * dt
+                    e_lost = min(max(e_lost, 0.0), w * dt)
+                    dP = Pc[t + w] - Pc[t]       # unclipped: tail billing
+                    v_succ = dP + V_new[j - i, e]
+                    v_fail = e_lost * (dP / (w * dt)) + R[j]
+                    cost = (1 - p_fail) * v_succ + p_fail * v_fail
+                    best = min(best, cost)
+                V_new[j, t] = best
+        V = V_new
+    return V
+
+
 @pytest.mark.parametrize("job_steps", [8, 16])
 def test_jax_dp_matches_oracle(job_steps):
     dist = D.constrained_for()
@@ -60,6 +117,50 @@ def test_jax_dp_matches_oracle(job_steps):
                               n_sweeps=3)
     np.testing.assert_allclose(tab.V[: job_steps + 1], V_oracle,
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("job_steps", [8, 16])
+def test_jax_dollar_dp_matches_oracle(job_steps):
+    """Differential oracle for the dollar objective: a price spike mid-
+    horizon plus a nonzero restart overhead exercises every dollar-specific
+    term (tail billing, priced lost work, launch-priced restarts)."""
+    from repro.core import market as M
+    dist = D.constrained_for()
+    t_max = int(round(float(dist.L) / GRID_DT))
+    pdt = 1.0
+    prices = np.full(12, 0.10)
+    prices[3:6] = 0.48                         # crunch window, hours 3-6
+    price = M.PriceGrid.from_prices(prices[None, :], pdt)
+    tab = C.solve(dist, job_steps, grid_dt=GRID_DT, delta_steps=1,
+                  n_sweeps=3, restart_overhead=0.3, objective="dollars",
+                  price=price)
+    assert tab.objective == "dollars"
+    V_oracle = _dollar_oracle_tables(dist, prices, pdt, job_steps, t_max,
+                                     delta_steps=1, n_sweeps=3,
+                                     restart_overhead=0.3)
+    np.testing.assert_allclose(tab.V[: job_steps + 1], V_oracle,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dollar_dp_beats_any_fixed_interval():
+    """Optimality in the new currency: V(J,0) <= expected dollars of every
+    uniform schedule priced by the float64 policy evaluator."""
+    from repro.core import market as M
+    dist = D.constrained_for()
+    J = 12
+    prices = np.full(12, 0.10)
+    prices[3:6] = 0.48
+    price = M.PriceGrid.from_prices(prices[None, :], 1.0)
+    tab = C.solve_batch([dist], J, grid_dt=GRID_DT, delta_steps=1,
+                        n_sweeps=6, restart_overhead=0.3,
+                        objective="dollars", price=price)
+    v_dp = float(np.asarray(tab.V)[0, J, 0])
+    for interval in (1, 2, 4, 8, 12):
+        K = np.full_like(np.asarray(tab.K), interval)
+        V_fix = C.evaluate_policy_dollars(
+            K, [dist], price, grid_dt=GRID_DT, delta_steps=1, n_sweeps=6,
+            restart_overhead=0.3)
+        assert v_dp <= V_fix[0, J, 0] + 1e-3, interval
 
 
 def test_fixed_point_converged():

@@ -179,6 +179,60 @@ def test_integrate_cost_ref_closed_form_tail_and_nan():
     assert np.isnan(f(float("nan")))
 
 
+def test_price_grid_shift_at_and_beyond_horizon_boundary():
+    """``shift`` clamps to the LAST cell, never reads past the trace: a
+    launch exactly at the horizon (or beyond it) yields a constant grid at
+    the final price, and a pre-launch (negative) anchor clamps to 0."""
+    rows = np.array([[1.0, 2.0, 3.0, 4.0]])
+    g = M.PriceGrid.from_prices(rows, 0.5)
+    at = g.shift(g.horizon)                   # t0 == horizon: k0 == T
+    np.testing.assert_array_equal(at.prices, np.full((1, 4), 4.0))
+    beyond = g.shift(g.horizon + 7.25)
+    np.testing.assert_array_equal(beyond.prices, np.full((1, 4), 4.0))
+    np.testing.assert_array_equal(g.shift(-3.0).prices, g.prices)
+    # the last cell BEFORE the horizon still sees its own price first
+    last = g.shift(g.horizon - g.dt)
+    np.testing.assert_array_equal(last.prices, np.full((1, 4), 4.0))
+    # shifted grids re-derive cum, so the integral convention is preserved
+    np.testing.assert_allclose(at.cum[0], np.arange(5) * 4.0 * 0.5,
+                               rtol=1e-12)
+
+
+def test_integrate_cost_ref_makespan_exactly_on_grid_edges():
+    """A makespan landing exactly on a cell edge bills zero fraction of the
+    next cell: ``f(k*dt) == cum[k]`` bit-for-bit, including the horizon
+    edge where the clamped last cell takes over."""
+    g = M.PriceGrid.from_prices([[2.0, 4.0, 8.0]], 0.5)
+
+    def f(m):
+        return M.integrate_cost_ref(g.prices[0], g.cum[0], g.dt, m)
+
+    for k in range(3):
+        assert f(k * 0.5) == g.cum[0, k]
+    # horizon edge: k clamps to the last cell, frac covers exactly one dt
+    assert f(3 * 0.5) == g.cum[0, 3]
+    assert f(3 * 0.5) == f(1.5)
+
+
+def test_price_feed_grid_tracks_the_market_clock():
+    """``PriceFeed.grid`` snapshots the ticker from the CURRENT clock cell
+    forward — the forecast the dollar-objective runtime solve prices
+    against — without disturbing the feed's determinism."""
+    feed = M.PriceFeed(seed=11, dt=0.5, tick_hours=0.25)
+    g0 = feed.grid(3.0)
+    assert len(g0) == 1 and g0.dt == 0.5
+    assert g0.prices.shape == (1, 6)          # ceil(3.0 / 0.5)
+    np.testing.assert_array_equal(g0.prices[0], feed._trace[:6])
+    # advance the clock past two price cells; the snapshot re-anchors
+    for _ in range(5):                        # 5 x 0.25h -> clock 1.25h
+        feed.advance()
+    g1 = feed.grid(1.0)
+    np.testing.assert_array_equal(g1.prices[0], feed._trace[2:4])
+    # same seed, fresh feed: identical snapshot (determinism preserved)
+    np.testing.assert_array_equal(M.PriceFeed(seed=11, dt=0.5).grid(3.0)
+                                  .prices, g0.prices)
+
+
 # ---------------------------------------------------------------------------
 # batched gather == serial reference, bit-for-bit under x64
 # ---------------------------------------------------------------------------
@@ -283,6 +337,33 @@ def test_sweep_market_tables_reuse_and_validation():
         SC.sweep_market(scs, market=mkt, regimes=("stormy",), **_SWEEP_KW)
     with pytest.raises(ValueError):
         SC.sweep_market(scs, market=mkt, policies=("greedy",), **_SWEEP_KW)
+
+
+def test_sweep_market_dollar_objective_end_to_end():
+    """``dp_objective='dollars'`` threads the regime-anchored price grid
+    into the DP solve: tables come back dollar-denominated, ``tables=``
+    reuse matches the self-solving sweep row-for-row, and mixing table
+    objectives raises before any trial is simulated."""
+    scs = _sweep_scenarios()
+    mkt = M.MarketModel.for_scenarios(scs)
+    tabs = SC.solve_market_tables(scs, mkt,
+                                  job_steps=_SWEEP_KW["job_steps"],
+                                  dp_objective="dollars")
+    for b in tabs.values():
+        assert b.objective == "dollars"
+        b.validate()
+    _assert_rows_identical(
+        SC.sweep_market(scs, market=mkt, tables=tabs,
+                        dp_objective="dollars", **_SWEEP_KW),
+        SC.sweep_market(scs, market=mkt, dp_objective="dollars",
+                        **_SWEEP_KW))
+    mk_tabs = SC.solve_market_tables(scs, mkt,
+                                     job_steps=_SWEEP_KW["job_steps"])
+    with pytest.raises(ValueError, match="objective"):
+        SC.sweep_market(scs, market=mkt, tables=mk_tabs,
+                        dp_objective="dollars", **_SWEEP_KW)
+    with pytest.raises(ValueError, match="objective"):
+        SC.sweep_market(scs, market=mkt, tables=tabs, **_SWEEP_KW)
 
 
 # ---------------------------------------------------------------------------

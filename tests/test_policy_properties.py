@@ -59,6 +59,71 @@ def test_dp_value_bounds(p, job_steps):
     assert np.all(np.diff(V[:, 0]) >= -1e-4)
 
 
+prices4 = st.lists(st.floats(0.05, 0.60), min_size=4, max_size=4)
+
+
+def _flat_grid(rate, n=8, pdt=4.0):
+    from repro.core import market as M
+    return M.PriceGrid.from_prices(np.full((1, n), rate), pdt)
+
+
+@settings(max_examples=6, deadline=None)
+@given(params, st.floats(0.06, 0.55))
+def test_dollar_flat_price_proportional_to_makespan(p, rate):
+    """Constant price: dollar V == rate x makespan V (up to f32 rounding)
+    for ANY plausible model and ANY rate — the exchange-rate identity that
+    anchors the dollar objective to the makespan one."""
+    d = D.Constrained(**p)
+    mk = C.solve(d, 36, grid_dt=1.0 / 12.0, n_sweeps=2)
+    dl = C.solve(d, 36, grid_dt=1.0 / 12.0, n_sweeps=2,
+                 objective="dollars", price=_flat_grid(rate))
+    np.testing.assert_allclose(np.asarray(dl.V), rate * np.asarray(mk.V),
+                               rtol=2e-4, atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(params, prices4)
+def test_dollar_value_monotone_in_price(p, base):
+    """Raising the price pointwise can only raise expected dollars: every
+    term of the recurrence (segment bill, priced lost work, launch-priced
+    restart) is monotone in the price trace."""
+    from repro.core import market as M
+    d = D.Constrained(**p)
+    lo = M.PriceGrid.from_prices(np.asarray(base)[None, :], 8.0)
+    hi = M.PriceGrid.from_prices(np.asarray(base)[None, :] * 1.5, 8.0)
+    kw = dict(grid_dt=1.0 / 12.0, n_sweeps=2, restart_overhead=0.2,
+              objective="dollars")
+    v_lo = np.asarray(C.solve(d, 36, price=lo, **kw).V)
+    v_hi = np.asarray(C.solve(d, 36, price=hi, **kw).V)
+    assert np.all(v_hi >= v_lo * (1.0 - 1e-4) - 1e-6)
+
+
+def test_dollar_crunch_window_stretches_checkpoint_interval():
+    """Where the price spikes, each checkpoint's delta costs real dollars
+    while the lost-work risk is only expensive if the VM dies INSIDE the
+    window — so over the expensive window the dollar DP checkpoints less
+    aggressively on average than the makespan DP.  (Pointwise K can still
+    shrink in spots: deep in the window a tiny segment that defers the bulk
+    of the work past the spike is genuinely optimal, so the property is a
+    mean over the window, not a per-cell dominance.)"""
+    from repro.core import market as M
+    d = D.constrained_for()
+    prices = np.full(24, 0.10)
+    prices[17:23] = 0.60        # expensive window over the hazard rise,
+    price = M.PriceGrid.from_prices(prices[None, :], 1.0)  # hours 17-23
+    mk = C.solve(d, 60, grid_dt=1.0 / 12.0, delta_steps=2, n_sweeps=3,
+                 restart_overhead=0.2)
+    dl = C.solve(d, 60, grid_dt=1.0 / 12.0, delta_steps=2, n_sweeps=3,
+                 restart_overhead=0.2, objective="dollars", price=price)
+    # the chosen interval for a full fresh job launched inside the window
+    # (the makespan DP checkpoints actively there: K < j on most cells)
+    cells = slice(17 * 12, 22 * 12)
+    K_mk = np.asarray(mk.K)[60, cells]
+    K_dl = np.asarray(dl.K)[60, cells]
+    assert (K_mk < 60).mean() > 0.5        # the window is actually active
+    assert K_dl.mean() > K_mk.mean() * 1.1
+
+
 def test_dp_intervals_shrink_with_cheaper_checkpoints():
     """delta -> 0 should never lengthen the optimal first interval."""
     d = D.constrained_for()

@@ -20,6 +20,7 @@ from repro import fault
 from repro.core import distributions as D
 from repro.core import engine as E
 from repro.core import fitting as F
+from repro.core import market as M
 from repro.core import runtime as rt
 from repro.core import scenarios as SC
 from repro.core.policies import checkpointing as C
@@ -142,6 +143,39 @@ def test_batch_tables_validate_rejects_poison(small_tables):
     badK[0, 4, 2] = 40
     with pytest.raises(ValueError, match="outside"):
         dataclasses.replace(small_tables, K=badK).validate()
+
+
+def test_batch_tables_validate_rejects_subset_scenario_violation():
+    """Regression: the K >= 1 invariant is enforced across the WHOLE
+    scenario axis — a violation in only one scenario of a healthy batch
+    must still reject (a per-scenario reduction that any-reduces the wrong
+    axis would pass it)."""
+    ds = [D.constrained_for(), D.Exponential(mttf=8.0)]
+    tabs = C.solve_batch(ds, CFG["job_steps"], grid_dt=CFG["grid_dt"])
+    assert tabs.validate() is tabs
+    badK = tabs.K.copy()
+    badK[1, 7, 3] = 0            # work remains (j=7) in scenario 1 only
+    with pytest.raises(ValueError, match="K < 1"):
+        dataclasses.replace(tabs, K=badK).validate()
+    assert np.all(badK[0] == tabs.K[0]), "scenario 0 stayed healthy"
+
+
+def test_batch_tables_validate_dollar_unit_messages():
+    """Dollar tables share the objective-independent invariants but name
+    their own unit in the rejection message."""
+    price = M.PriceGrid.from_prices(np.full((1, 8), 0.2), 4.0)
+    tabs = C.solve_batch([D.constrained_for()], CFG["job_steps"],
+                         grid_dt=CFG["grid_dt"], objective="dollars",
+                         price=price)
+    assert tabs.validate() is tabs
+    badV = tabs.V.copy()
+    badV[0, 2, 2] = np.nan
+    with pytest.raises(ValueError, match=r"non-finite V entries \(dollars\)"):
+        dataclasses.replace(tabs, V=badV).validate()
+    negV = tabs.V.copy()
+    negV[0, 1, 0] = -0.01
+    with pytest.raises(ValueError, match="negative dollars"):
+        dataclasses.replace(tabs, V=negV).validate()
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +353,26 @@ def test_runtime_evaluate_serves_from_live_tables():
     assert len(rows) == len(fr.scenario_names)
     live = [r for r in rows if r["scenario"] == fr.cfg.live_name]
     assert live and np.isfinite(live[0]["expected_makespan_dp"])
+
+
+def test_runtime_dollar_objective_serves_dollar_tables():
+    """dp_objective='dollars' without a ticker is a config error; with one,
+    every solve — bootstrap and refits alike — prices against the feed's
+    forward snapshot and the fleet serves validated dollar tables
+    throughout."""
+    with pytest.raises(ValueError, match="price_feed"):
+        rt.FleetRuntime(rt.RuntimeConfig(**{**CFG,
+                                            "dp_objective": "dollars"}))
+    feed = M.PriceFeed(seed=3)
+    fr = rt.FleetRuntime(rt.RuntimeConfig(**{**CFG,
+                                             "dp_objective": "dollars"}),
+                         price_feed=feed)
+    assert fr.live_tables.objective == "dollars"
+    rep = fr.run(64)                     # past the initial fit -> a refit
+    assert rep.n_refits >= 1
+    assert fr.live_tables.objective == "dollars"
+    assert rep.dollars_streamed > 0.0
+    _assert_serving_valid(fr)
 
 
 def test_scenario_dist_override_short_circuits_catalog():
